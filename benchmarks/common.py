@@ -1,0 +1,156 @@
+"""Shared benchmark machinery: run every algorithm of Section 5 on a
+dataset partitioned across s sites, with budget-matched summary sizes, and
+report the paper's metrics (summary size, l1/l2 loss, preRec/prec/recall,
+communication, wall time).
+
+Scaling note: the container is a single CPU core, so dataset sizes default
+to ~100-500k points instead of the paper's 1-5M; every entry point takes
+--scale to restore paper-scale sizes on real hardware.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.augmented import augmented_summary_compact
+from repro.core import (augmented_summary_outliers, kmeans_minus_minus,
+                        kmeans_parallel_summary, kmeanspp_summary,
+                        local_budget, rand_summary, summary_outliers_compact)
+from repro.core.metrics import clustering_losses, outlier_scores
+from repro.data.synthetic import partition
+
+ALGOS = ("ball-grow", "k-means++", "k-means||", "rand")
+
+
+@dataclass
+class Row:
+    algo: str
+    summary: int
+    l1: float
+    l2: float
+    pre_rec: float
+    prec: float
+    recall: float
+    comm: float
+    t_summary: float   # wall seconds to build all summaries (parallel model)
+    t_second: float    # coordinator second-level seconds
+
+
+def _second_level(pts, wts, gids, k, t, key, block_n=65536):
+    n = pts.shape[0]
+    t0 = time.perf_counter()
+    sol = kmeans_minus_minus(jnp.asarray(pts), jnp.asarray(wts),
+                             jnp.ones((n,), bool), key, k=k, t=float(t),
+                             iters=25, block_n=block_n)
+    jax.block_until_ready(sol.centers)
+    dt = time.perf_counter() - t0
+    out = gids[np.asarray(sol.outlier)]
+    return np.asarray(sol.centers), out, dt
+
+
+def run_algo(algo: str, parts, gids_parts, k: int, t: int, key,
+             budget_per_site: int | None = None, sites_meta: int | None = None):
+    """Build per-site summaries + coordinator clustering for one algorithm.
+    Returns (summary records dict, timings)."""
+    s = len(parts)
+    t_i = local_budget(t, s, "random")
+    all_pts, all_w, all_gid = [], [], []
+    t_sites = []
+    comm_extra = 0.0
+    warmed = False
+    for i, part in enumerate(parts):
+        skey = jax.random.fold_in(key, i)
+        xj = jnp.asarray(part)
+        if not warmed and algo in ("k-means++", "k-means||", "rand"):
+            # exclude one-time jit compile from the paper's time comparison
+            if algo == "k-means++":
+                jax.block_until_ready(kmeanspp_summary(
+                    xj, skey, budget=budget_per_site, block_n=65536).points)
+            elif algo == "k-means||":
+                jax.block_until_ready(kmeans_parallel_summary(
+                    xj, skey, budget=budget_per_site, sites=sites_meta or s,
+                    block_n=65536).summary.points)
+            else:
+                jax.block_until_ready(rand_summary(
+                    xj, skey, budget=budget_per_site, block_n=65536).points)
+            warmed = True
+        t0 = time.perf_counter()
+        if algo == "ball-grow":
+            # host-compacted path: the paper's O(max{k,log n}*n + t*n) cost
+            summ = augmented_summary_compact(part, skey, k=k, t=t_i,
+                                             block_n=65536)
+        elif algo == "k-means++":
+            summ = kmeanspp_summary(xj, skey, budget=budget_per_site,
+                                    block_n=65536)
+        elif algo == "k-means||":
+            res = kmeans_parallel_summary(xj, skey, budget=budget_per_site,
+                                          sites=sites_meta or s, block_n=65536)
+            summ = res.summary
+            comm_extra += float(res.comm_records) / s  # multi-round overhead
+        elif algo == "rand":
+            summ = rand_summary(xj, skey, budget=budget_per_site, block_n=65536)
+        else:
+            raise ValueError(algo)
+        jax.block_until_ready(summ.points)
+        t_sites.append(time.perf_counter() - t0)
+        valid = np.asarray(summ.valid)
+        all_pts.append(np.asarray(summ.points)[valid])
+        all_w.append(np.asarray(summ.weights)[valid])
+        all_gid.append(gids_parts[i][np.asarray(summ.indices)[valid]])
+    pts = np.concatenate(all_pts)
+    wts = np.concatenate(all_w)
+    gid = np.concatenate(all_gid)
+    # parallel-sites wall model: median site (robust to the one-time jit
+    # compile landing on site 0 for the algorithms without a warmup path)
+    return pts, wts, gid, float(np.median(t_sites)), float(len(gid)) + comm_extra
+
+
+def evaluate(x, out_ids, parts, gids_parts, k, t, *, seed=0,
+             algos=ALGOS) -> list[Row]:
+    key = jax.random.key(seed)
+    rows = []
+    budget = None
+    for algo in algos:
+        pts, wts, gid, t_sum, comm = run_algo(
+            algo, parts, gids_parts, k, t, key, budget_per_site=budget)
+        if algo == "ball-grow":  # size-match the baselines to ball-grow
+            budget = max(1, int(math.ceil(len(gid) / len(parts))))
+        centers, reported, t_second = _second_level(
+            pts, wts, gid, k, t, jax.random.fold_in(key, 999))
+        sc = outlier_scores(out_ids, gid, reported)
+        mask = np.zeros(x.shape[0], bool)
+        mask[reported] = True
+        l1, l2 = clustering_losses(jnp.asarray(x), jnp.asarray(centers),
+                                   jnp.asarray(mask))
+        rows.append(Row(algo=algo, summary=len(gid), l1=float(l1), l2=float(l2),
+                        pre_rec=sc.pre_recall, prec=sc.precision,
+                        recall=sc.recall, comm=comm, t_summary=t_sum,
+                        t_second=t_second))
+    return rows
+
+
+def print_rows(title: str, rows: list[Row]):
+    print(f"\n== {title} ==")
+    print(f"{'algo':12s} {'summary':>8s} {'l1-loss':>10s} {'l2-loss':>10s} "
+          f"{'preRec':>7s} {'prec':>7s} {'recall':>7s} {'comm':>9s} "
+          f"{'t_sum(s)':>8s} {'t_2nd(s)':>8s}")
+    for r in rows:
+        print(f"{r.algo:12s} {r.summary:8d} {r.l1:10.3e} {r.l2:10.3e} "
+              f"{r.pre_rec:7.4f} {r.prec:7.4f} {r.recall:7.4f} {r.comm:9.0f} "
+              f"{r.t_summary:8.2f} {r.t_second:8.2f}")
+
+
+def csv_rows(name: str, rows: list[Row]) -> list[str]:
+    out = []
+    for r in rows:
+        us = r.t_summary * 1e6
+        derived = (f"l1={r.l1:.4g};l2={r.l2:.4g};preRec={r.pre_rec:.4f};"
+                   f"prec={r.prec:.4f};recall={r.recall:.4f};"
+                   f"summary={r.summary};comm={r.comm:.0f}")
+        out.append(f"{name}/{r.algo},{us:.0f},{derived}")
+    return out

@@ -1,0 +1,107 @@
+"""Paper Figure 1: (a) communication vs #sites, (b) summary-construction
+time vs #sites, (c) time vs summary size — kddSp-like data.
+
+ball-grow / k-means++ / rand communicate one round (cost = summary union);
+k-means|| pays per-round gather+broadcast that grows with s (Fig 1a).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import run_algo, ALGOS
+from repro.data.synthetic import kdd_like, partition
+
+
+def fig1a_comm(x, out_ids, k, t, sites_list, seed=0):
+    print("\n== fig1a: communication (records) vs #sites ==")
+    print(f"{'algo':12s} " + " ".join(f"s={s:<7d}" for s in sites_list))
+    key = jax.random.key(seed)
+    rows = {}
+    for algo in ALGOS:
+        comms = []
+        for s in sites_list:
+            parts, gids = partition(x, s, "random", seed=seed,
+                                    outlier_ids=out_ids)
+            budget = None
+            if algo != "ball-grow":
+                pts, _, gid, _, _ = run_algo("ball-grow", parts, gids, k, t, key)
+                budget = max(1, int(np.ceil(len(gid) / s)))
+            _, _, gid, _, comm = run_algo(algo, parts, gids, k, t, key,
+                                          budget_per_site=budget, sites_meta=s)
+            comms.append(comm)
+        rows[algo] = comms
+        print(f"{algo:12s} " + " ".join(f"{c:<9.0f}" for c in comms))
+    return rows
+
+
+def fig1b_time(x, out_ids, k, t, sites_list, seed=0):
+    print("\n== fig1b: summary construction wall time (s, parallel-site model) ==")
+    print(f"{'algo':12s} " + " ".join(f"s={s:<7d}" for s in sites_list))
+    key = jax.random.key(seed)
+    rows = {}
+    for algo in ALGOS:
+        ts = []
+        for s in sites_list:
+            parts, gids = partition(x, s, "random", seed=seed,
+                                    outlier_ids=out_ids)
+            budget = None
+            if algo != "ball-grow":
+                _, _, gid, _, _ = run_algo("ball-grow", parts, gids, k, t, key)
+                budget = max(1, int(np.ceil(len(gid) / s)))
+            _, _, _, t_sum, _ = run_algo(algo, parts, gids, k, t, key,
+                                         budget_per_site=budget, sites_meta=s)
+            ts.append(t_sum)
+        rows[algo] = ts
+        print(f"{algo:12s} " + " ".join(f"{v:<9.2f}" for v in ts))
+    return rows
+
+
+def fig1c_time_vs_summary(x, out_ids, k, seed=0, sites=10):
+    print("\n== fig1c: time vs summary size (vary t) ==")
+    key = jax.random.key(seed)
+    parts, gids = partition(x, sites, "random", seed=seed, outlier_ids=out_ids)
+    rows = {}
+    for t in (len(out_ids) // 4, len(out_ids) // 2, len(out_ids),
+              2 * len(out_ids)):
+        _, _, gid, t_bg, _ = run_algo("ball-grow", parts, gids, k, t, key)
+        budget = max(1, int(np.ceil(len(gid) / sites)))
+        line = {"summary": len(gid), "ball-grow": t_bg}
+        for algo in ("k-means++", "k-means||", "rand"):
+            _, _, _, t_sum, _ = run_algo(algo, parts, gids, k, t, key,
+                                         budget_per_site=budget, sites_meta=sites)
+            line[algo] = t_sum
+        rows[t] = line
+        print(f"t={t:<7d} summary={line['summary']:<8d} " +
+              " ".join(f"{a}={line[a]:.2f}s" for a in ALGOS))
+    return rows
+
+
+def run(scale: float = 0.2, seed: int = 0):
+    n = int(490_000 * scale)
+    x, out_ids = kdd_like(n=n, seed=seed)
+    k, t = 3, len(out_ids)
+    sites = [2, 5, 10, 20]
+    a = fig1a_comm(x, out_ids, k, t, sites, seed)
+    b = fig1b_time(x, out_ids, k, t, sites, seed)
+    c = fig1c_time_vs_summary(x, out_ids, k, seed)
+    return a, b, c
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.2)
+    args = ap.parse_args()
+    a, b, c = run(scale=args.scale)
+    for algo, comms in a.items():
+        print(f"fig1a/{algo},{0:.0f},comm=" + "|".join(f"{v:.0f}" for v in comms))
+    for algo, ts in b.items():
+        print(f"fig1b/{algo},{ts[-1]*1e6:.0f},time_s=" +
+              "|".join(f"{v:.2f}" for v in ts))
+
+
+if __name__ == "__main__":
+    main()

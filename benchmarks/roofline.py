@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS §Roofline).
+
+Reads artifacts/dryrun/*.json and prints, per (arch x shape x mesh):
+compute/memory/collective seconds, the dominant term, MODEL_FLOPS ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(art_dir="artifacts/dryrun", mesh="single"):
+    rows = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("mesh") != mesh:
+            continue
+        rows.append(d)
+    return rows
+
+
+def print_table(rows, show_skipped=True):
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'bound':>7s} {'useful%':>8s} {'drun%':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for d in rows:
+        if d["status"] == "skipped":
+            if show_skipped:
+                print(f"{d['arch']:26s} {d['shape']:12s} {'— skipped: ' + d['reason'][:60]}")
+            continue
+        if d["status"] != "ok":
+            print(f"{d['arch']:26s} {d['shape']:12s} FAILED")
+            continue
+        dom = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        mf = d.get("model_flops_per_chip")
+        ach = (mf / 197e12) / dom if (dom and mf) else 0
+        print(f"{d['arch']:26s} {d['shape'][:12]:12s} {d['compute_s']:10.4f} "
+              f"{d['memory_s']:10.4f} {d['collective_s']:10.4f} "
+              f"{d['bottleneck'][:7]:>7s} "
+              f"{100*(d.get('useful_flops_ratio') or 0):8.1f} {100*ach:6.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "single-opt"])
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir, args.mesh)
+    print_table(rows)
+    for d in rows:
+        if d["status"] == "ok":
+            dom = max(d["compute_s"], d["memory_s"], d["collective_s"])
+            ach = (d["model_flops_per_chip"] / 197e12) / dom if dom else 0
+            print(f"roofline/{d['arch']}/{d['shape']},{dom*1e6:.0f},"
+                  f"bound={d['bottleneck']};roofline_frac={ach:.4f};"
+                  f"useful={d['useful_flops_ratio'] or 0:.4f}")
+
+
+if __name__ == "__main__":
+    main()

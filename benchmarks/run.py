@@ -1,0 +1,82 @@
+"""Benchmark orchestrator — one experiment per paper table/figure plus the
+roofline reader. Prints ``name,us_per_call,derived`` CSV lines.
+
+Scaled-for-one-CPU-core defaults; pass --scale to approach paper scale.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None,
+                    help="dataset scale override (default: per-bench scaled)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table3,table4,fig1,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    csv: list[str] = []
+    t_start = time.perf_counter()
+
+    def want(name):
+        return only is None or name in only
+
+    if want("table2"):
+        from benchmarks.table2_gauss import run as t2
+        from benchmarks.common import csv_rows
+        rows = t2(scale=args.scale or 0.1)
+        for name, rr in rows.items():
+            csv += csv_rows(f"table2/{name}", rr)
+
+    if want("table3"):
+        from benchmarks.table3_kdd import run as t3
+        from benchmarks.common import csv_rows
+        rows = t3(scale=args.scale or 0.1)
+        for name, rr in rows.items():
+            csv += csv_rows(f"table3/{name}", rr)
+
+    if want("table4"):
+        from benchmarks.table4_susy import run as t4
+        from benchmarks.common import csv_rows
+        rows = t4(scale=args.scale or 0.04)
+        for name, rr in rows.items():
+            csv += csv_rows(f"table4/{name}", rr)
+
+    if want("fig1"):
+        from benchmarks.fig1_comm_time import run as f1
+        a, b, _ = f1(scale=args.scale or 0.1)
+        for algo, comms in a.items():
+            csv.append(f"fig1a/{algo},0,comm=" + "|".join(f"{v:.0f}" for v in comms))
+        for algo, ts in b.items():
+            csv.append(f"fig1b/{algo},{ts[-1] * 1e6:.0f},time_s=" +
+                       "|".join(f"{v:.2f}" for v in ts))
+
+    if want("roofline"):
+        from benchmarks.roofline import load, print_table
+        for mesh in ("single", "multi", "single-opt"):
+            rows = load(mesh=mesh)
+            if rows:
+                print(f"\n== roofline ({mesh}-pod) ==")
+                print_table(rows, show_skipped=False)
+                for d in rows:
+                    if d["status"] == "ok":
+                        dom = max(d["compute_s"], d["memory_s"], d["collective_s"])
+                        mf = d.get("model_flops_per_chip")
+                        ach = (mf / 197e12) / dom if (dom and mf) else 0
+                        csv.append(f"roofline-{mesh}/{d['arch']}/{d['shape']},"
+                                   f"{dom * 1e6:.0f},bound={d['bottleneck']};"
+                                   f"roofline_frac={ach:.4f}")
+
+    print("\n# ==== CSV (name,us_per_call,derived) ====")
+    for line in csv:
+        print(line)
+    print(f"# total bench wall: {time.perf_counter() - t_start:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 2: clustering quality on gauss-sigma, k=100, t=5000, s=20.
+
+Container default is scaled to n=100k (k=50, t=500); --scale 1.0 restores
+the paper's 1M-point setup.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_rows, evaluate, print_rows
+from repro.data.synthetic import gauss, partition
+
+
+def run(scale: float = 0.1, sites: int = 20, seed: int = 0):
+    rows_all = {}
+    n_centers = max(10, int(100 * scale))
+    per_center = max(200, int(10_000 * scale))
+    t = max(50, int(5_000 * scale))
+    k = n_centers
+    for sigma in (0.1, 0.4):
+        x, out_ids = gauss(n_centers=n_centers, per_center=per_center,
+                           sigma=sigma, t=t, seed=seed)
+        parts, gids = partition(x, sites, "random", seed=seed,
+                                outlier_ids=out_ids)
+        rows = evaluate(x, out_ids, parts, gids, k, t, seed=seed)
+        print_rows(f"table2 gauss-{sigma} n={x.shape[0]} k={k} t={t} s={sites}",
+                   rows)
+        rows_all[f"gauss-{sigma}"] = rows
+    return rows_all
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--sites", type=int, default=20)
+    args = ap.parse_args()
+    rows = run(scale=args.scale, sites=args.sites)
+    for name, rr in rows.items():
+        for line in csv_rows(f"table2/{name}", rr):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 3: clustering quality on kddSp / kddFull (statistically
+matched synthetic stand-ins; DESIGN §8), k=3.
+
+Scaled: kddSp-like 100k (paper 490k), kddFull-like 400k (paper 4.9M).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_rows, evaluate, print_rows
+from repro.data.synthetic import kdd_like, partition
+
+
+def run(scale: float = 0.2, sites: int = 20, seed: int = 0):
+    rows_all = {}
+    for name, n in (("kddSp", int(490_000 * scale)),
+                    ("kddFull", int(2_000_000 * scale))):
+        x, out_ids = kdd_like(n=n, seed=seed)
+        t = len(out_ids)
+        parts, gids = partition(x, sites, "random", seed=seed,
+                                outlier_ids=out_ids)
+        rows = evaluate(x, out_ids, parts, gids, 3, t, seed=seed)
+        print_rows(f"table3 {name}-like n={x.shape[0]} k=3 t={t} s={sites}", rows)
+        rows_all[name] = rows
+    return rows_all
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--sites", type=int, default=20)
+    args = ap.parse_args()
+    rows = run(scale=args.scale, sites=args.sites)
+    for name, rr in rows.items():
+        for line in csv_rows(f"table3/{name}", rr):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

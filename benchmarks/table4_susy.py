@@ -1,0 +1,39 @@
+"""Paper Table 4: clustering quality on susy-Delta (matched synthetic
+stand-in), k=100, t=5000 at paper scale; scaled by default.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import csv_rows, evaluate, print_rows
+from repro.data.synthetic import partition, susy_like
+
+
+def run(scale: float = 0.06, sites: int = 20, seed: int = 0):
+    rows_all = {}
+    n = int(5_000_000 * scale)
+    t = max(50, int(5_000 * scale * 2))
+    k = max(20, int(100 * min(1.0, scale * 10)))
+    for delta in (5.0, 10.0):
+        x, out_ids = susy_like(n=n, t=t, delta=delta, seed=seed)
+        parts, gids = partition(x, sites, "random", seed=seed,
+                                outlier_ids=out_ids)
+        rows = evaluate(x, out_ids, parts, gids, k, t, seed=seed)
+        print_rows(f"table4 susy-{delta:.0f} n={n} k={k} t={t} s={sites}", rows)
+        rows_all[f"susy-{delta:.0f}"] = rows
+    return rows_all
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.06)
+    ap.add_argument("--sites", type=int, default=20)
+    args = ap.parse_args()
+    rows = run(scale=args.scale, sites=args.sites)
+    for name, rr in rows.items():
+        for line in csv_rows(f"table4/{name}", rr):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

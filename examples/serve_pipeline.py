@@ -1,0 +1,64 @@
+"""Batched serving demo: prefill + ring-buffer KV-cache decode with
+request batching and per-step token streaming, on the smoke-scale Mistral
+(llava backbone) config.
+
+    PYTHONPATH=src python examples/serve_pipeline.py --batch 4 --gen 32
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models.layers import ShardCtx
+from repro.models.transformer import forward_prefill, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    ctx = ShardCtx(mesh=None)
+    params = init_params(cfg, jax.random.key(args.seed))
+
+    # batched prompts (random tokens — a tokenizer would sit here)
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 2, cfg.vocab)
+    t0 = time.perf_counter()
+    logits, cache = forward_prefill(params, {"tokens": prompts}, cfg, ctx,
+                                    max_len=args.prompt_len + args.gen)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.0f} ms")
+
+    serve_step = jax.jit(make_serve_step(cfg, mesh=None))
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, cache = serve_step(params, cache, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    toks = np.concatenate([np.asarray(t) for t in out], axis=1)
+    print(f"decode: {args.gen - 1} steps x {args.batch} seqs in {dt*1e3:.0f} ms "
+          f"({(args.gen - 1) * args.batch / dt:.0f} tok/s incl. first-step jit)")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: {toks[b, :16].tolist()}...")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""End-to-end training driver: LM training with the paper's outlier-based
+data curation + checkpointing + straggler monitoring.
+
+A Markov-chain token stream is polluted with a small fraction of uniform-
+noise documents.  Sequence embeddings feed the DataCurator (Algorithm 3
+with sites = DP shards); detected outlier sequences are dropped from the
+loss.  The curated run reaches lower clean-set loss than the uncurated one.
+
+Presets: --preset tiny (default, ~2M params, CPU-friendly) / 100m (the
+"train a ~100M model" configuration — same code path, for real hardware).
+
+    PYTHONPATH=src python examples/train_curated_lm.py --steps 200
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.curation import CuratorConfig, DataCurator
+from repro.data.tokens import PipelineConfig, TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx
+from repro.models.transformer import forward_train, init_params
+from repro.optim import adamw
+from repro.runtime.straggler import StragglerMonitor
+
+PRESETS = {
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                 vocab=64, seq=64, batch=16),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab=32000, seq=1024, batch=64),
+}
+
+
+def make_batch(pipe, step, rng, noise_frac):
+    b = pipe.global_batch(step)["tokens"]
+    n_noise = int(noise_frac * b.shape[0])
+    noisy = rng.choice(b.shape[0], n_noise, replace=False)
+    b = b.copy()
+    b[noisy] = rng.integers(0, pipe.cfg.vocab, size=(n_noise, b.shape[1]))
+    seq_ids = step * b.shape[0] + np.arange(b.shape[0])
+    return b, seq_ids, noisy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--noise-frac", type=float, default=0.1)
+    ap.add_argument("--no-curation", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}", family="dense", n_layers=p["n_layers"],
+        d_model=p["d_model"], n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+        d_ff=p["d_ff"], vocab=p["vocab"], dtype="float32",
+        remat_policy="none")
+    pipe = TokenPipeline(PipelineConfig(vocab=p["vocab"], seq_len=p["seq"],
+                                        global_batch=p["batch"],
+                                        seed=args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    params = init_params(cfg, jax.random.key(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params | curation: "
+          f"{'off' if args.no_curation else 'on'}")
+
+    step_fn, optc = make_train_step(cfg, mesh=None)
+    opt = adamw.init(params, optc)
+    ctx = ShardCtx(mesh=None)
+
+    @jax.jit
+    def weighted_step(params, opt_state, tokens, w):
+        def loss_fn(pp):
+            from repro.models.layers import rmsnorm, unembed
+            from repro.models.transformer import ce_loss, _embed_inputs
+            import repro.models.transformer as T
+            x, _ = T._embed_inputs(pp, {"tokens": tokens}, cfg, ctx)
+            S = x.shape[1]
+            pos = jnp.arange(S, dtype=jnp.int32)
+            def body(c, lp):
+                y, _ = T._dense_layer_train(lp, c, cfg, ctx, pos)
+                return y, None
+            x, _ = jax.lax.scan(body, x, pp["layers"])
+            xe = x  # embeddings for curation: mean-pooled last hidden
+            x = rmsnorm(pp["final_norm"], x, cfg.norm_eps)
+            logits = unembed(pp["lm_head"], x, ctx)
+            tgt = tokens[:, 1:]
+            lg = logits[:, :-1]
+            nll = (jax.nn.logsumexp(lg, -1)
+                   - jnp.take_along_axis(lg, tgt[..., None], -1)[..., 0])
+            per_seq = nll.mean(-1)
+            loss = (per_seq * w).sum() / jnp.maximum(w.sum(), 1.0)
+            return loss, (per_seq, jax.lax.stop_gradient(xe.mean(1)))
+        (loss, (per_seq, emb)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_o, om = adamw.apply(params, grads, opt_state, optc)
+        return new_p, new_o, loss, per_seq, emb
+
+    curator = DataCurator(n_sites=4, cfg=CuratorConfig(
+        k=8, outlier_frac=args.noise_frac / 2, min_points=256,
+        reservoir=2048, seed=args.seed))
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=2)
+    monitor = StragglerMonitor(n_sites=4)
+    flagged = None
+
+    clean_losses = []
+    for step in range(args.steps):
+        tokens, seq_ids, noisy = make_batch(pipe, step, rng, args.noise_frac)
+        w = (np.ones(len(seq_ids), np.float32) if args.no_curation
+             else curator.sample_weights(seq_ids, flagged))
+        t0 = time.perf_counter()
+        params, opt, loss, per_seq, emb = weighted_step(
+            params, opt, jnp.asarray(tokens), jnp.asarray(w))
+        dt = time.perf_counter() - t0
+        monitor.observe(np.full(4, dt, np.float32)
+                        + rng.normal(0, dt * 0.02, 4).astype(np.float32))
+
+        if not args.no_curation:
+            emb_np = np.asarray(emb)
+            per_site = np.array_split(np.arange(len(seq_ids)), 4)
+            for s_i, idx in enumerate(per_site):
+                curator.observe(s_i, emb_np[idx], seq_ids[idx])
+            if step % 25 == 24:
+                flagged, comm = curator.detect()
+                if flagged is not None:
+                    print(f"  [curation] step {step}: {len(flagged)} outlier "
+                          f"sequences flagged, comm={comm:.0f} records")
+        clean = np.asarray(per_seq)[np.setdiff1d(np.arange(len(seq_ids)), noisy)]
+        clean_losses.append(float(clean.mean()))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss={float(loss):.4f} "
+                  f"clean={clean_losses[-1]:.4f} ({dt*1e3:.0f} ms)")
+        if step % 50 == 49:
+            ckpt.save(step, {"params": params, "opt": opt})
+    ckpt.wait()
+    print(f"final clean-set loss: {np.mean(clean_losses[-10:]):.4f} "
+          f"(start {np.mean(clean_losses[:10]):.4f})")
+    print(f"checkpoints: {ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — summary construction + distributed
+(k,t)-means/median with outliers."""
+from repro.core.summary import (  # noqa: F401
+    Summary, summary_outliers, summary_outliers_compact, information_loss,
+)
+from repro.core.augmented import augmented_summary_outliers  # noqa: F401
+from repro.core.kmeans_mm import OutlierClustering, kmeans_minus_minus  # noqa: F401
+from repro.core.kmeans_pp import kmeanspp_seed, kmeanspp_summary, pp_budget  # noqa: F401
+from repro.core.kmeans_parallel import kmeans_parallel_summary  # noqa: F401
+from repro.core.rand_summary import rand_summary  # noqa: F401
+from repro.core.distributed import (  # noqa: F401
+    DistClusterResult, distributed_cluster, simulate_coordinator, local_budget,
+)
+from repro.core.metrics import clustering_losses, outlier_scores  # noqa: F401

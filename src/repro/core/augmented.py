@@ -1,0 +1,155 @@
+"""Algorithm 2 (Augmented-Summary-Outliers).
+
+When t >> k the plain summary is outlier-heavy: |X_r| ~ 8t candidates but
+only O(k log n) centers.  The augmentation samples |X_r| - |S| extra centers
+S' from X \\ (X_r u S) and reassigns every non-candidate point to its nearest
+center in S u S', which can only lower the information loss
+(phi_X(pi) <= phi_X(sigma)).  Cost grows to O(t*n) for the reassignment —
+still one pass of fused min-dist+argmin, i.e. one pdist kernel call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.summary import Summary, summary_outliers, _plan
+from repro.kernels.pdist.ops import min_argmin
+
+_FAR = 1e30  # sentinel coordinate for invalid center slots
+
+
+def augmented_summary_compact(
+    x,
+    key,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    block_n: int = 65536,
+) -> "Summary":
+    """Host-driven Algorithm 2 with the paper's O(t*n) cost: compact
+    Algorithm 1 (O(max{k,log n}*n)), then one fused min-dist+argmin pass for
+    the reassignment. Used by the wall-clock benchmarks."""
+    import numpy as np
+    from repro.core.summary import summary_outliers_compact
+
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    key, k1, k2 = jax.random.split(jax.random.fold_in(key, 17), 3)
+    base = summary_outliers_compact(x, k1, k=k, t=t, alpha=alpha, beta=beta,
+                                    metric=metric, block_n=block_n)
+    sel = np.asarray(base.indices)
+    cand = np.asarray(base.is_candidate)
+    cand_ids = sel[cand]
+    center_ids = sel[~cand]
+    extra = max(int(cand_ids.size) - int(center_ids.size), 0)
+    if extra:
+        eligible = np.setdiff1d(np.arange(n), sel)
+        if eligible.size == 0:
+            eligible = np.arange(n)
+        pick = np.asarray(jax.random.randint(k2, (extra,), 0, eligible.size))
+        center_ids = np.concatenate([center_ids, eligible[pick]])
+    # Line 3: reassign everything outside X_r to nearest center in S u S'
+    _, amin = min_argmin(jnp.asarray(x), jnp.asarray(x[center_ids]),
+                         metric=metric, block_n=block_n)
+    pi = center_ids[np.asarray(amin)]
+    pi[cand_ids] = cand_ids
+    w = np.zeros(n, np.float32)
+    np.add.at(w, pi, 1.0)
+    all_ids = np.concatenate([np.unique(center_ids), cand_ids])
+    is_cand = np.concatenate([np.zeros(np.unique(center_ids).size, bool),
+                              np.ones(cand_ids.size, bool)])
+    return Summary(
+        indices=jnp.asarray(all_ids, jnp.int32),
+        points=jnp.asarray(x[all_ids]),
+        weights=jnp.asarray(w[all_ids]),
+        is_candidate=jnp.asarray(is_cand),
+        valid=jnp.ones(all_ids.size, bool),
+        sigma=jnp.asarray(pi, jnp.int32),
+        n_rounds=base.n_rounds,
+        n_remaining=base.n_remaining,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "t", "alpha", "beta", "metric", "block_n", "use_pallas"),
+)
+def augmented_summary_outliers(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    block_n: int = 16384,
+    use_pallas: bool = False,
+) -> Summary:
+    n, d = x.shape
+    key, k1, k2 = jax.random.split(key, 3)
+    base = summary_outliers(
+        x, k1, k=k, t=t, alpha=alpha, beta=beta, metric=metric,
+        block_n=block_n, use_pallas=use_pallas,
+    )
+    _, m, rounds, _ = _plan(n, k, t, alpha, beta)
+
+    # Existing center / candidate masks over X (from the base summary).
+    cand_mask = jnp.zeros((n,), bool).at[
+        jnp.where(base.valid & base.is_candidate, base.indices, n)
+    ].set(True, mode="drop")
+    center_mask = jnp.zeros((n,), bool).at[
+        jnp.where(base.valid & ~base.is_candidate, base.indices, n)
+    ].set(True, mode="drop")
+
+    n_cand = (base.valid & base.is_candidate).sum()
+    n_centers = (base.valid & ~base.is_candidate).sum()
+
+    # Line 2: sample |X_r| - |S| extra centers from X \ (X_r u S).
+    extra_cap = 8 * t + 1  # |X_r| <= 8t, so never need more than this
+    eligible = ~(cand_mask | center_mask)
+    # guard: if nothing is eligible fall back to sampling anywhere
+    logits = jnp.where(eligible, 0.0, -jnp.inf)
+    logits = jnp.where(eligible.any(), logits, jnp.zeros((n,)))
+    extra_idx = jax.random.categorical(k2, logits, shape=(extra_cap,)).astype(jnp.int32)
+    n_extra = jnp.maximum(n_cand - n_centers, 0)
+    extra_valid = jnp.arange(extra_cap) < n_extra
+    extra_mask = jnp.zeros((n,), bool).at[
+        jnp.where(extra_valid, extra_idx, n)
+    ].set(True, mode="drop")
+
+    all_center_mask = center_mask | extra_mask
+    center_cap = rounds * m + extra_cap
+    c_idx = jnp.nonzero(all_center_mask, size=center_cap, fill_value=n)[0].astype(jnp.int32)
+    xp = jnp.concatenate([x, jnp.full((1, d), _FAR, x.dtype)], axis=0)
+    c_pts = xp[c_idx]  # invalid slots sit at _FAR -> never nearest
+
+    # Line 3: reassign every x in X \ X_r to its nearest center in S u S'.
+    _, amin = min_argmin(x, c_pts, metric=metric, block_n=block_n,
+                         use_pallas=use_pallas)
+    pi = jnp.where(cand_mask, jnp.arange(n, dtype=jnp.int32), c_idx[amin])
+
+    # Line 4: weights under the new mapping.
+    w = jnp.zeros((n,), jnp.float32).at[pi].add(1.0)
+
+    sel = all_center_mask | cand_mask
+    cap = center_cap + 8 * t + 1
+    idx_q = jnp.nonzero(sel, size=cap, fill_value=n)[0].astype(jnp.int32)
+    xz = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    wp = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+    candp = jnp.concatenate([cand_mask, jnp.zeros((1,), bool)])
+    return Summary(
+        indices=idx_q,
+        points=xz[idx_q],
+        weights=wp[idx_q],
+        is_candidate=candp[idx_q],
+        valid=idx_q < n,
+        sigma=pi,
+        n_rounds=base.n_rounds,
+        n_remaining=base.n_remaining,
+    )

@@ -1,0 +1,96 @@
+"""k-means-- (Chawla & Gionis 2013), weighted, as the second-level clusterer.
+
+Lloyd-style alternation that jointly optimizes k centers and t outliers:
+each iteration assigns points to nearest centers, marks the farthest mass
+(total weight <= t) as outliers, and recomputes centers from the inliers.
+The paper adopts exactly this as the coordinator-side algorithm: it returns
+exactly k centers + t outliers and works well in practice (no worst-case
+guarantee, as they note).
+
+This version is weighted so it can consume summary points: a summary record
+(q, w_q) acts as w_q coincident points.  Outlier selection is the natural
+weighted generalization — greedily take farthest records while the
+cumulative weight stays <= t.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans_pp import kmeanspp_seed
+from repro.kernels.pdist.ops import min_argmin
+
+
+class OutlierClustering(NamedTuple):
+    centers: jnp.ndarray       # (k, d)
+    assignment: jnp.ndarray    # (n,) int32 — nearest-center index
+    outlier: jnp.ndarray       # (n,) bool
+    cost: jnp.ndarray          # () weighted objective over inliers
+    distances: jnp.ndarray     # (n,) distance to assigned center
+
+
+def _mark_outliers(dist, w_eff, t):
+    """Greedy farthest-first: True for records whose cumulative weight
+    (in decreasing-distance order) stays within the budget t."""
+    order = jnp.argsort(-dist)
+    cumw = jnp.cumsum(w_eff[order])
+    out_sorted = (cumw <= t) & (w_eff[order] > 0)
+    return jnp.zeros_like(out_sorted).at[order].set(out_sorted)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "metric", "block_n", "use_pallas"))
+def kmeans_minus_minus(
+    points: jnp.ndarray,
+    weights: jnp.ndarray,
+    valid: jnp.ndarray,
+    key: jax.Array,
+    *,
+    k: int,
+    t: float,
+    iters: int = 25,
+    metric: str = "l2sq",
+    block_n: int = 16384,
+    use_pallas: bool = False,
+) -> OutlierClustering:
+    n, d = points.shape
+    w = weights.astype(jnp.float32) * valid
+    seed_idx, _ = kmeanspp_seed(points, w, key, budget=k, metric=metric)
+    centers0 = points[seed_idx]
+
+    def step(centers, _):
+        if use_pallas and metric in ("l2sq", "l2"):
+            # fused assign + accumulate (Pallas lloyd kernel); the outlier
+            # mask still needs a second accumulate pass with corrected w.
+            from repro.kernels.lloyd.ops import lloyd_step
+            _, _, amin, dist = lloyd_step(points, w, centers, metric=metric,
+                                          use_pallas=True)
+        else:
+            dist, amin = min_argmin(points, centers, metric=metric, block_n=block_n)
+        dist = jnp.where(valid, dist, -jnp.inf)   # padding: never an outlier
+        out = _mark_outliers(dist, w, t)
+        w_in = w * ~out
+        if use_pallas and metric in ("l2sq", "l2"):
+            from repro.kernels.lloyd.ops import lloyd_step
+            sums, cnts, _, _ = lloyd_step(points, w_in, centers, metric=metric,
+                                          use_pallas=True)
+        else:
+            sums = jnp.zeros((k, d), jnp.float32).at[amin].add(points * w_in[:, None])
+            cnts = jnp.zeros((k,), jnp.float32).at[amin].add(w_in)
+        new_centers = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts, 1e-9)[:, None], centers)
+        return new_centers, None
+
+    centers, _ = jax.lax.scan(step, centers0, None, length=iters)
+    dist, amin = min_argmin(points, centers, metric=metric, block_n=block_n)
+    dist = jnp.where(valid, dist, -jnp.inf)
+    out = _mark_outliers(dist, w, t)
+    cost = jnp.sum(jnp.where(valid & ~out, dist, 0.0) * w)
+    return OutlierClustering(
+        centers=centers,
+        assignment=amin.astype(jnp.int32),
+        outlier=out & valid,
+        cost=cost,
+        distances=jnp.where(valid, dist, jnp.inf),
+    )

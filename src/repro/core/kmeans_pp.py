@@ -1,0 +1,100 @@
+"""Weighted k-means++ (Arthur & Vassilvitskii 2007) D^p seeding.
+
+Used in three roles:
+  * seeding for the second-level k-means-- at the coordinator,
+  * the paper's `k-means++` *baseline summary*: run seeding with a budget of
+    B = O(k log n + t) centers on the local data, weight each center by the
+    number of points nearest to it,
+  * seeding inside k-means|| post-processing.
+
+p = 2 for (k,t)-means, p = 1 for (k,t)-median.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.summary import Summary
+from repro.kernels.pdist.ops import min_argmin
+
+
+def _dist_to(x, c, metric):
+    if metric == "l1":
+        return jnp.abs(x - c[None, :]).sum(-1)
+    sq = ((x - c[None, :]) ** 2).sum(-1)
+    return sq if metric == "l2sq" else jnp.sqrt(sq)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric"))
+def kmeanspp_seed(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    key: jax.Array,
+    *,
+    budget: int,
+    metric: str = "l2sq",
+):
+    """Pick ``budget`` rows of ``x`` by weighted D^p sampling.
+
+    Returns (center indices (budget,) int32, min-dist of every point to the
+    chosen set).  Zero-weight rows are never chosen.
+    """
+    n = x.shape[0]
+    w = w.astype(jnp.float32)
+
+    def body(carry, _):
+        key, mind, chosen_any = carry
+        key, sk = jax.random.split(key)
+        score = w * mind
+        # first pick: plain weighted sampling (mind starts at +inf -> use w)
+        score = jnp.where(jnp.isinf(mind), w, score)
+        score = jnp.where(score.sum() > 0, score, w)
+        logits = jnp.log(jnp.maximum(score, 1e-30))
+        logits = jnp.where(w > 0, logits, -jnp.inf)
+        idx = jax.random.categorical(sk, logits).astype(jnp.int32)
+        d = _dist_to(x, x[idx], metric)
+        mind = jnp.minimum(mind, d)
+        return (key, mind, chosen_any | True), idx
+
+    # x-derived init keeps the scan carry's shard_map vma tag consistent.
+    mind0 = jnp.full((n,), jnp.inf, jnp.float32) + x[:, 0] * 0
+    init = (key, mind0, False)
+    (_, mind, _), idx = jax.lax.scan(body, init, None, length=budget)
+    return idx, mind
+
+
+def pp_budget(n: int, k: int, t: int) -> int:
+    """The paper's baseline budget O(k log n + t)."""
+    return int(k * max(1, math.ceil(math.log(max(n, 2)))) + t)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "block_n"))
+def kmeanspp_summary(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    budget: int,
+    metric: str = "l2sq",
+    block_n: int = 16384,
+) -> Summary:
+    """The `k-means++` baseline summary: budgeted seeding + nearest counts."""
+    n, d = x.shape
+    w1 = jnp.ones((n,), jnp.float32)
+    idx, _ = kmeanspp_seed(x, w1, key, budget=budget, metric=metric)
+    centers = x[idx]
+    _, amin = min_argmin(x, centers, metric=metric, block_n=block_n)
+    counts = jnp.zeros((budget,), jnp.float32).at[amin].add(1.0)
+    sigma = idx[amin]
+    return Summary(
+        indices=idx,
+        points=centers,
+        weights=counts,
+        is_candidate=jnp.zeros((budget,), bool),
+        valid=jnp.ones((budget,), bool),
+        sigma=sigma,
+        n_rounds=jnp.int32(budget),
+        n_remaining=jnp.int32(0),
+    )

@@ -1,0 +1,42 @@
+"""`rand` baseline summary: uniform sample + nearest-neighbour weights.
+
+Each site samples `budget` points uniformly, assigns every local point to
+its nearest sample, and weights samples by assignment counts.  One round of
+communication, same record format as the paper's summary — but no outlier
+candidates, which is why it fails at outlier detection (paper Tables 2-4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.summary import Summary
+from repro.kernels.pdist.ops import min_argmin
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "block_n"))
+def rand_summary(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    budget: int,
+    metric: str = "l2sq",
+    block_n: int = 16384,
+) -> Summary:
+    n, d = x.shape
+    idx = jax.random.choice(key, n, (budget,), replace=False).astype(jnp.int32)
+    centers = x[idx]
+    _, amin = min_argmin(x, centers, metric=metric, block_n=block_n)
+    counts = jnp.zeros((budget,), jnp.float32).at[amin].add(1.0)
+    return Summary(
+        indices=idx,
+        points=centers,
+        weights=counts,
+        is_candidate=jnp.zeros((budget,), bool),
+        valid=jnp.ones((budget,), bool),
+        sigma=idx[amin],
+        n_rounds=jnp.int32(1),
+        n_remaining=jnp.int32(0),
+    )

@@ -1,0 +1,234 @@
+"""Algorithm 1 (Summary-Outliers) from Chen, Sadeqi Azer & Zhang (2018).
+
+Two implementations of the same algorithm:
+
+* ``summary_outliers``        — single ``jax.jit`` with ``lax.while_loop`` over a
+  fixed-capacity masked state.  Shapes are static, so this version composes
+  with ``shard_map`` (Algorithm 3 runs it per site inside one program) and
+  lowers for the TPU dry-run.  Cost: O(R·n·m) distance work because the
+  masked array never shrinks (R = #rounds).
+* ``summary_outliers_compact`` — host-driven loop that physically compacts
+  X_i between rounds, recovering the paper's O(n·m) total work
+  (Σ|X_i| ≤ n/β).  Used by the wall-clock benchmarks; not shard_map-able.
+
+Both implement the same sampling process (they draw with different PRNG
+mechanics, so summaries agree statistically, not bit-for-bit); both are
+tested against the same invariants and loss bounds.
+
+Notation maps 1:1 to the paper: kappa = max{k, log n}; each round samples
+``m = alpha*kappa`` points S_i from the remainder X_i, grows balls of the
+smallest radius rho_i capturing a beta fraction, assigns captured points to
+their nearest sample (sigma), and recurses.  Stops when |X_i| <= 8t; the
+survivors X_r are the outlier *candidates* (weight 1), the samples are the
+summary centers (weight = |sigma^{-1}|).
+
+The paper's experiments state "alpha=2, beta=4.5"; Algorithm 1 requires
+0.25 <= beta < 0.5, so we read beta=0.45 (typo) and default to that.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pdist.ops import min_argmin
+
+
+class Summary(NamedTuple):
+    """Fixed-capacity weighted summary Q of a dataset X.
+
+    indices      (cap,) int32  — index into the original X; == n for padding
+    points       (cap, d) f32  — the summary points (zeros for padding)
+    weights      (cap,) f32    — |sigma^{-1}(x)|; 0 for padding
+    is_candidate (cap,) bool   — True for X_r members (outlier candidates)
+    valid        (cap,) bool   — real entry vs padding
+    sigma        (n,) int32    — the paper's mapping sigma: X -> X
+    n_rounds     () int32      — r
+    n_remaining  () int32      — |X_r|
+    """
+
+    indices: jnp.ndarray
+    points: jnp.ndarray
+    weights: jnp.ndarray
+    is_candidate: jnp.ndarray
+    valid: jnp.ndarray
+    sigma: jnp.ndarray
+    n_rounds: jnp.ndarray
+    n_remaining: jnp.ndarray
+
+    @property
+    def size(self):
+        return self.valid.sum()
+
+
+def _plan(n: int, k: int, t: int, alpha: float, beta: float):
+    """Static (python) round/capacity plan. Deterministic upper bounds:
+    each round removes >= ceil(beta*|X_i|) points, so
+    |X_i| <= n*(1-beta)^i and R = ceil(log(n/max(8t,1)) / -log(1-beta))."""
+    kappa = max(k, max(1, math.ceil(math.log(max(n, 2)))))
+    m = max(1, int(math.ceil(alpha * kappa)))
+    stop = max(8 * t, 1)
+    if n <= stop:
+        rounds = 0
+    else:
+        rounds = max(1, int(math.ceil(math.log(n / stop) / -math.log1p(-beta))))
+    cap = min(n, rounds * m + 8 * t + 1)
+    return kappa, m, rounds, cap
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "t", "alpha", "beta", "metric", "block_n", "use_pallas"),
+)
+def summary_outliers(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    block_n: int = 16384,
+    use_pallas: bool = False,
+) -> Summary:
+    """Fixed-shape Summary-Outliers (Algorithm 1). jit/shard_map friendly."""
+    n, d = x.shape
+    _, m, rounds, cap = _plan(n, k, t, alpha, beta)
+    stop = 8 * t
+
+    def cond(state):
+        i, _, active, _, _ = state
+        return (active.sum() > stop) & (i < rounds)
+
+    def body(state):
+        i, key, active, sigma, center_mask = state
+        key, sk = jax.random.split(key)
+        # Line 6: sample m points (with replacement) uniformly from X_i.
+        logits = jnp.where(active, 0.0, -jnp.inf)
+        idx = jax.random.categorical(sk, logits, shape=(m,))
+        s = x[idx]
+        # Line 7: nearest-sample distance for every remaining point.
+        mind, amin = min_argmin(x, s, metric=metric, block_n=block_n,
+                                use_pallas=use_pallas)
+        masked = jnp.where(active, mind, jnp.inf)
+        # Line 8: smallest rho with |B(S_i, X_i, rho)| >= beta*|X_i|.
+        cnt = active.sum()
+        kth = jnp.clip(jnp.ceil(beta * cnt).astype(jnp.int32), 1, cnt)
+        rho = jnp.sort(masked)[kth - 1]
+        captured = active & (mind <= rho)
+        # Line 9: sigma(x) <- nearest sample, as a global index.
+        sigma = jnp.where(captured, idx[amin], sigma)
+        center_mask = center_mask.at[idx].set(True)
+        return i + 1, key, active & ~captured, sigma, center_mask
+
+    # Derive carry inits from x so they carry the same varying-manual-axes
+    # (vma) tag as x — required for running inside shard_map (Algorithm 3).
+    vzero = (x[:, 0] * 0).astype(jnp.int32)
+    init = (
+        jnp.int32(0),
+        key,
+        vzero == 0,
+        jnp.arange(n, dtype=jnp.int32) + vzero,
+        vzero != 0,
+    )
+    if rounds == 0:
+        i, _, active, sigma, center_mask = init
+    else:
+        i, _, active, sigma, center_mask = jax.lax.while_loop(cond, body, init)
+
+    # Line 13: survivors map to themselves (already arange-initialized, but a
+    # captured-then-resampled point cannot exist; make the invariant explicit).
+    sigma = jnp.where(active, jnp.arange(n, dtype=jnp.int32), sigma)
+    # Line 14: weights w_x = |sigma^{-1}(x)|.
+    w = jnp.zeros((n,), jnp.float32).at[sigma].add(1.0)
+
+    sel = center_mask | active
+    idx_q = jnp.nonzero(sel, size=cap, fill_value=n)[0].astype(jnp.int32)
+    xp = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    wp = jnp.concatenate([w, jnp.zeros((1,), jnp.float32)])
+    cand = jnp.concatenate([active, jnp.zeros((1,), bool)])
+    return Summary(
+        indices=idx_q,
+        points=xp[idx_q],
+        weights=wp[idx_q],
+        is_candidate=cand[idx_q],
+        valid=idx_q < n,
+        sigma=sigma,
+        n_rounds=i,
+        n_remaining=active.sum(),
+    )
+
+
+def summary_outliers_compact(
+    x,
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    block_n: int = 65536,
+) -> Summary:
+    """Host-driven Summary-Outliers that compacts X_i between rounds.
+
+    Work matches the paper's O(max{k, log n} * n): the i-th round touches
+    |X_i| <= n(1-beta)^i points. The distance inner loop stays jitted
+    (min_argmin); set logic runs in numpy on the host.
+    """
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    _, m, _, _ = _plan(n, k, t, alpha, beta)
+    stop = max(8 * t, 1)
+
+    remaining = np.arange(n, dtype=np.int64)          # global ids of X_i
+    sigma = np.arange(n, dtype=np.int64)
+    center_ids: list[np.ndarray] = []
+    rounds = 0
+    while remaining.size > stop:
+        key, sk = jax.random.split(key)
+        pick = np.asarray(jax.random.randint(sk, (m,), 0, remaining.size))
+        idx = remaining[pick]                          # global sample ids
+        xi = x[remaining]
+        mind, amin = (np.asarray(a) for a in
+                      min_argmin(xi, x[idx], metric=metric, block_n=block_n))
+        kth = int(np.clip(np.ceil(beta * remaining.size), 1, remaining.size))
+        rho = np.partition(mind, kth - 1)[kth - 1]
+        captured = mind <= rho
+        sigma[remaining[captured]] = idx[amin[captured]]
+        center_ids.append(idx)
+        remaining = remaining[~captured]
+        rounds += 1
+
+    sigma[remaining] = remaining
+    w = np.zeros((n,), np.float32)
+    np.add.at(w, sigma, 1.0)
+
+    centers = np.unique(np.concatenate(center_ids)) if center_ids else np.empty(0, np.int64)
+    is_cand = np.zeros((n,), bool)
+    is_cand[remaining] = True
+    sel = np.union1d(centers, remaining).astype(np.int64)
+    return Summary(
+        indices=jnp.asarray(sel, jnp.int32),
+        points=jnp.asarray(x[sel]),
+        weights=jnp.asarray(w[sel]),
+        is_candidate=jnp.asarray(is_cand[sel]),
+        valid=jnp.ones((sel.size,), bool),
+        sigma=jnp.asarray(sigma, jnp.int32),
+        n_rounds=jnp.int32(rounds),
+        n_remaining=jnp.int32(remaining.size),
+    )
+
+
+def information_loss(x: jnp.ndarray, sigma: jnp.ndarray, metric: str = "l2sq"):
+    """loss(Q) = phi_X(sigma) = sum_x d(x, sigma(x))  (Definition 2)."""
+    delta = x - x[sigma]
+    if metric == "l1":
+        return jnp.abs(delta).sum()
+    sq = (delta * delta).sum(-1)
+    return sq.sum() if metric == "l2sq" else jnp.sqrt(sq).sum()

@@ -1,0 +1,23 @@
+"""Public wrapper for the fused Lloyd step (assign + weighted accumulate).
+
+Dispatch: Pallas kernel for l2sq/l2 (on TPU, or interpret mode for tests);
+pure-jnp fallback otherwise (l1, or CPU production path where interpret mode
+would be slow).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lloyd.ref import lloyd_step_ref
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def lloyd_step(x, w, c, *, metric: str = "l2sq", use_pallas: bool = False):
+    """Returns (sums (k,d), counts (k,), assignment (n,), dist (n,))."""
+    if use_pallas and metric in ("l2sq", "l2"):
+        from repro.kernels.lloyd.kernel import lloyd_step_pallas
+        return lloyd_step_pallas(x, w, c, metric=metric)
+    return lloyd_step_ref(x, w, c, metric)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused Lloyd step.
+
+Given points x (n,d), weights w (n,), centers c (k,d), one Lloyd step needs:
+  assignment a_i = argmin_j d(x_i, c_j)
+  dist_i     = d(x_i, c_{a_i})
+  sums_j     = sum_{i: a_i=j} w_i * x_i        (weighted centroid numerators)
+  counts_j   = sum_{i: a_i=j} w_i
+
+The TPU kernel fuses all four so the (n,k) distance matrix never leaves
+VMEM and the scatter-add becomes a per-tile one-hot matmul on the MXU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pdist.ref import pairwise
+
+
+def lloyd_step_ref(x, w, c, metric: str = "l2sq"):
+    d = pairwise(x, c, metric)
+    a = d.argmin(axis=1).astype(jnp.int32)
+    dist = d.min(axis=1)
+    k = c.shape[0]
+    sums = jnp.zeros((k, x.shape[1]), jnp.float32).at[a].add(x * w[:, None])
+    counts = jnp.zeros((k,), jnp.float32).at[a].add(w)
+    return sums, counts, a, dist

@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: fused min-distance + argmin (the paper's hot-spot).
+
+The paper's Algorithm 1 spends all of its time computing d(x, S_i) for every
+remaining point — an (n x m x d) problem with tiny m (= alpha*max{k, log n})
+and small-to-moderate d.  A naive implementation materializes the (n, m)
+distance matrix in HBM (n can be millions); this kernel never does:
+
+  grid = (n_tiles, m_tiles)   -- m innermost ("arbitrary"), n "parallel"
+  x tile  (BN, d)  in VMEM    -- revisited across the m loop
+  c tile  (BM, d)  in VMEM
+  dist tile = x2 + c2 - 2 * x @ c^T   (MXU matmul, f32 accumulate)
+  running (min, argmin) held in the OUTPUT blocks, which pallas keeps
+  resident in VMEM across the inner m loop (same index_map for all j).
+
+Arithmetic intensity: 2*BN*BM*d FLOPs per (BN*d + BM*d) * 4 bytes moved,
+i.e. ~2*BM FLOPs/byte for BM >= BN — MXU-bound for BM >= ~128, which is why
+BM defaults to 128 and BN to 512 (8 sublane-tiles of f32).
+
+Tie-breaking matches ref.py: strict `<` updates keep the earliest m-tile;
+within a tile jnp.argmin returns the first minimum.
+
+The l1 metric adds a d grid axis (no MXU for |x-c|): partial sums accumulate
+into a VMEM scratch and the min-update fires on the last d step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG = 3.0e38  # python float: jnp scalars would be captured as kernel consts
+_PAD_COORD = 1.0e15  # padded center rows sit absurdly far away
+
+
+def _l2_kernel(x_ref, c_ref, dmin_ref, amin_ref, *, bm: int, sqrt: bool):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dmin_ref[...] = jnp.full_like(dmin_ref, _BIG)
+        amin_ref[...] = jnp.zeros_like(amin_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # (BN, d)
+    c = c_ref[...].astype(jnp.float32)           # (BM, d)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # (BN, 1)
+    c2 = jnp.sum(c * c, axis=-1)                 # (BM,)
+    # MXU: (BN, d) @ (d, BM)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dist = jnp.maximum(x2 + c2[None, :] - 2.0 * xc, 0.0)  # (BN, BM)
+    if sqrt:
+        dist = jnp.sqrt(dist)
+    dloc = jnp.min(dist, axis=1, keepdims=True)            # (BN, 1)
+    aloc = jnp.argmin(dist, axis=1).astype(jnp.int32)[:, None] + j * bm
+
+    better = dloc < dmin_ref[...]
+    dmin_ref[...] = jnp.where(better, dloc, dmin_ref[...])
+    amin_ref[...] = jnp.where(better, aloc, amin_ref[...])
+
+
+def _l1_kernel(x_ref, c_ref, dmin_ref, amin_ref, acc_ref, *, bm: int, nd: int):
+    j = pl.program_id(1)
+    kd = pl.program_id(2)
+
+    @pl.when((j == 0) & (kd == 0))
+    def _init():
+        dmin_ref[...] = jnp.full_like(dmin_ref, _BIG)
+        amin_ref[...] = jnp.zeros_like(amin_ref)
+
+    @pl.when(kd == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # (BN, BD)
+    c = c_ref[...].astype(jnp.float32)           # (BM, BD)
+    acc_ref[...] += jnp.abs(x[:, None, :] - c[None, :, :]).sum(-1)
+
+    @pl.when(kd == nd - 1)
+    def _reduce():
+        dist = acc_ref[...]
+        dloc = jnp.min(dist, axis=1, keepdims=True)
+        aloc = jnp.argmin(dist, axis=1).astype(jnp.int32)[:, None] + j * bm
+        better = dloc < dmin_ref[...]
+        dmin_ref[...] = jnp.where(better, dloc, dmin_ref[...])
+        amin_ref[...] = jnp.where(better, aloc, amin_ref[...])
+
+
+def _pad_to(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bn", "bm", "bd", "interpret"))
+def min_argmin_pallas(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    metric: str = "l2sq",
+    bn: int = 512,
+    bm: int = 128,
+    bd: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused (min distance, argmin) — Pallas path. See module docstring."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x.shape
+    m = c.shape[0]
+    bn = min(bn, _pad_to(n, 8))
+    bm = min(bm, _pad_to(m, 128))
+    np_, mp = _pad_to(n, bn), _pad_to(m, bm)
+    xp = jnp.pad(x, ((0, np_ - n), (0, 0)))
+    cp = jnp.pad(c, ((0, mp - m), (0, 0)), constant_values=_PAD_COORD)
+
+    if metric in ("l2sq", "l2"):
+        dp = _pad_to(d, 128)
+        xp = jnp.pad(xp, ((0, 0), (0, dp - d)))
+        cp = jnp.pad(cp, ((0, 0), (0, dp - d)))  # both pad w/ same const -> dist 0
+        grid = (np_ // bn, mp // bm)
+        dmin, amin = pl.pallas_call(
+            functools.partial(_l2_kernel, bm=bm, sqrt=(metric == "l2")),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bn, dp), lambda i, j: (i, 0)),
+                pl.BlockSpec((bm, dp), lambda i, j: (j, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+                jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            ],
+            interpret=interpret,
+        )(xp, cp)
+    elif metric == "l1":
+        dp = _pad_to(d, 128)
+        bd = min(bd, dp)
+        dp = _pad_to(dp, bd)
+        xp = jnp.pad(xp, ((0, 0), (0, dp - d)))
+        cp = jnp.pad(cp, ((0, 0), (0, dp - d)))
+        nd = dp // bd
+        grid = (np_ // bn, mp // bm, nd)
+        dmin, amin = pl.pallas_call(
+            functools.partial(_l1_kernel, bm=bm, nd=nd),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bn, bd), lambda i, j, kd: (i, kd)),
+                pl.BlockSpec((bm, bd), lambda i, j, kd: (j, kd)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bn, 1), lambda i, j, kd: (i, 0)),
+                pl.BlockSpec((bn, 1), lambda i, j, kd: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+                jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            ],
+            scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+            interpret=interpret,
+        )(xp, cp)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return dmin[:n, 0], amin[:n, 0]

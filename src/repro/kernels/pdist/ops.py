@@ -1,0 +1,68 @@
+"""Production entry point for fused min-distance + argmin.
+
+``min_argmin(x, c, metric=..., block_n=..., use_pallas=...)``
+
+Dispatches to:
+  * the Pallas TPU kernel (``kernel.py``) when requested / on TPU, or
+  * a chunked pure-jnp path that never materializes more than
+    ``block_n × m`` distances at once (the (n, m) matrix for the paper's
+    datasets would be ~GBs; chunking keeps the working set cache-sized on
+    CPU and VMEM-sized on TPU).
+
+Both paths agree with ``ref.min_argmin_ref`` (tested in
+tests/test_kernels_pdist.py, incl. interpret=True kernel sweeps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+_DEFAULT_BLOCK_N = 16384
+
+
+def _block_min_argmin(xb: jnp.ndarray, c: jnp.ndarray, metric: str):
+    """One n-block against all centers. For l1, chunk centers to bound the
+    (bn, mc, d) broadcast."""
+    if metric == "l1":
+        m = c.shape[0]
+        mc = min(m, 64)
+        pad_m = (-m) % mc
+        cp = jnp.pad(c, ((0, pad_m), (0, 0)), constant_values=jnp.inf)
+        n_chunks = cp.shape[0] // mc
+
+        def body(carry, ci):
+            best_d, best_i = carry
+            cc = jax.lax.dynamic_slice_in_dim(cp, ci * mc, mc, axis=0)
+            d = jnp.abs(xb[:, None, :] - cc[None, :, :]).sum(-1)  # (bn, mc)
+            dmin = d.min(axis=1)
+            darg = d.argmin(axis=1).astype(jnp.int32) + ci * mc
+            take = dmin < best_d
+            return (jnp.where(take, dmin, best_d), jnp.where(take, darg, best_i)), None
+
+        init = (jnp.full((xb.shape[0],), jnp.inf, xb.dtype),
+                jnp.zeros((xb.shape[0],), jnp.int32))
+        (bd, bi), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+        return bd, bi
+    return _ref.min_argmin_ref(xb, c, metric)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_n", "use_pallas"))
+def min_argmin(x: jnp.ndarray, c: jnp.ndarray, *, metric: str = "l2sq",
+               block_n: int = _DEFAULT_BLOCK_N, use_pallas: bool = False):
+    """For each row of ``x`` (n, d): distance to nearest row of ``c`` (m, d)
+    and its index. Returns (dist (n,), idx (n,) int32)."""
+    if use_pallas:
+        from . import kernel as _kernel  # deferred: pallas import is optional
+        return _kernel.min_argmin_pallas(x, c, metric=metric)
+    n = x.shape[0]
+    if n <= block_n:
+        return _block_min_argmin(x, c, metric)
+    pad = (-n) % block_n
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xs = xp.reshape(-1, block_n, x.shape[1])
+    md, ai = jax.lax.map(lambda xb: _block_min_argmin(xb, c, metric), xs)
+    return md.reshape(-1)[:n], ai.reshape(-1)[:n]

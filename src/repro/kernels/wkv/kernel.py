@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: chunked WKV6 forward (the rwkv6 §Perf lever).
+
+The jnp chunked evaluation (models/rwkv6.py) materializes the intra-chunk
+decay tensor A (c, c, K) to HBM as a dot operand — at 7B scale that is the
+dominant memory-roofline term (EXPERIMENTS §Perf rwkv6 iteration 4). This
+kernel keeps everything chunk-local in VMEM:
+
+  grid = (BH_tiles, T/c)    chunk axis innermost ("arbitrary"), the running
+                            state S (bbh, K, V) lives in a VMEM scratch that
+                            persists across the chunk sweep
+  per step:  lin   = cumsum(lw_chunk)                    (bbh, c, K)  f32
+             A     = exp(lprev[t] - lin[tau]) masked     (bbh, c, c, K) VMEM
+             w_ts  = (r*A*k) summed over K               MXU-friendly einsum
+             o     = w_ts @ v + bonus + (r exp(lprev)) @ S
+             S     = exp(lin[-1]) * S + (k exp(lin[-1]-lin))^T @ v
+
+VMEM budget at bbh=8, c=16, K=V=64: A = 0.5 MB, S scratch = 128 KB, chunk
+tiles 4x256 KB — comfortably resident.
+
+Backward: jax.custom_vjp with the pure-jnp chunked recompute
+(models/rwkv6.wkv_chunked with inner_remat) — forward speed is what the
+roofline needs; the backward shares its math with the tested oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sT_ref, s_scr,
+            *, nc: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = s0_ref[...].astype(jnp.float32)
+
+    rr = r_ref[...].astype(jnp.float32)     # (bbh, c, K)
+    kk = k_ref[...].astype(jnp.float32)
+    vv = v_ref[...].astype(jnp.float32)
+    ll = lw_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)      # (bbh, K) — per (batch, head) row
+    s = s_scr[...]                          # (bbh, K, V)
+
+    c = rr.shape[1]
+    lin = jnp.cumsum(ll, axis=1)
+    lprev = lin - ll
+    # A[t, tau, i] = exp(lprev[t,i] - lin[tau,i]) for tau < t
+    a = jnp.exp(lprev[:, :, None, :] - lin[:, None, :, :])
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    a = jnp.where(tri[None, :, :, None], a, 0.0)
+    w_ts = jnp.einsum("bti,btsi,bsi->bts", rr, a, kk,
+                      preferred_element_type=jnp.float32)
+    o = jnp.einsum("bts,bsv->btv", w_ts, vv,
+                   preferred_element_type=jnp.float32)
+    # bonus (current token)
+    o += (rr * u[:, None, :] * kk).sum(-1, keepdims=True) * vv
+    # inter-chunk from carried state
+    o += jnp.einsum("bti,biv->btv", rr * jnp.exp(lprev), s,
+                    preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+    # state update
+    dec_all = jnp.exp(lin[:, -1:, :])                     # (bbh, 1, K)
+    s_new = s * dec_all.transpose(0, 2, 1) + jnp.einsum(
+        "bsi,bsv->biv", kk * jnp.exp(lin[:, -1:, :] - lin), vv,
+        preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+
+    @pl.when(j == nc - 1)
+    def _final():
+        sT_ref[...] = s_new.astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_bh", "interpret"))
+def wkv_forward_pallas(r, k, v, lw, u, s0, *, chunk: int = 16,
+                       block_bh: int = 8, interpret: bool | None = None):
+    """r,k,v,lw: (BH, T, K); u: (K,) shared or (BH, K) per-row;
+    s0: (BH, K, V) -> (o, sT)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    BH, T, K = r.shape
+    V = s0.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0, "pad T to a chunk multiple (models/rwkv6 does)"
+    nc = T // c
+    bbh = min(block_bh, BH)
+    assert BH % bbh == 0
+    grid = (BH // bbh, nc)
+    u2 = jnp.broadcast_to(u.reshape(1, K), (BH, K)) if u.ndim == 1 else u
+
+    o, sT = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bbh, c, K), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, c, K), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, c, K), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, c, K), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bbh, K, V), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bbh, c, K), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, K, V), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, K), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bbh, K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u2, s0)
+    return o, sT

@@ -1,0 +1,39 @@
+"""Public wrapper: WKV6 forward with custom VJP.
+
+Forward: the Pallas chunk kernel (VMEM-resident intra tensors).
+Backward: recompute via the tested jnp chunked path (models/rwkv6) —
+equivalent math, already validated against the step oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv_forward_pallas
+from repro.kernels.wkv.ref import wkv_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def wkv_forward(r, k, v, lw, u, s0, chunk: int = 16):
+    o, sT = wkv_forward_pallas(r, k, v, lw, u, s0, chunk=chunk)
+    return o, sT
+
+
+def _fwd(r, k, v, lw, u, s0, chunk):
+    out = wkv_forward_pallas(r, k, v, lw, u, s0, chunk=chunk)
+    return out, (r, k, v, lw, u, s0)
+
+
+def _bwd(chunk, res, cts):
+    r, k, v, lw, u, s0 = res
+
+    def f(r, k, v, lw, u, s0):
+        return wkv_ref(r, k, v, lw, u, s0)  # recompute in jnp for the VJP
+
+    _, vjp = jax.vjp(f, r, k, v, lw, u, s0)
+    return vjp(cts)
+
+
+wkv_forward.defvjp(_fwd, _bwd)

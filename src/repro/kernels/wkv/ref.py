@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the WKV6 recurrence (flattened batch*heads layout).
+
+    s_t = diag(w_t) s_{t-1} + k_t v_t^T
+    o_t = r_t^T (s_{t-1} + diag(u) k_t v_t^T)
+
+r,k,v: (BH, T, K); lw = log w (<= 0): (BH, T, K); u: (K,); s0: (BH, K, V).
+The Pallas kernel (kernel.py) evaluates this chunkwise with the intra-chunk
+decay tensor held in VMEM; this oracle is the step-by-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, lw, u, s0):
+    BH, _, K = r.shape
+    u2 = jnp.broadcast_to(u.reshape(1, K) if u.ndim == 1 else u, (BH, K))
+
+    def step(s, inp):
+        rr, kk, vv, ll = inp                                   # (BH, K)
+        kv = kk[:, :, None] * vv[:, None, :]                   # (BH, K, V)
+        o = jnp.einsum("bi,biv->bv", rr, s + u2[:, :, None] * kv)
+        s = s * jnp.exp(ll)[..., None] + kv
+        return s, o
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (r, k, v, lw))    # (T, BH, K)
+    sT, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return o.transpose(1, 0, 2), sT

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any other import: jax locks the device count on first
+# init, and the dry-run needs 512 placeholder devices for the 2x16x16 mesh.
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, GSPMD-partitions, and compiles — and extract the roofline terms.
+
+Per cell:
+  jax.jit(step, in_shardings=..., out_shardings=..., donate).lower(structs)
+  .compile() -> memory_analysis() + cost_analysis() + collective parse of
+  the partitioned HLO.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # 512-chip
+Artifacts: one JSON per cell under artifacts/dryrun/.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo import analyze as analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_supported, decode_structs, input_structs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.sharding import batch_specs, cache_specs, param_specs
+from repro.models.transformer import init_params
+from repro.optim import adamw
+
+# TPU v5e per-chip peaks (roofline constants; see EXPERIMENTS §Roofline)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+
+def _jsonable(x):
+    if isinstance(x, (int, float, str, bool)) or x is None:
+        return x
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    return str(x)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               dump_hlo: str | None = None, cfg_overrides: dict | None = None,
+               dp_tp: tuple | None = None):
+    """Lower + compile one cell; returns the stats dict."""
+    mesh = make_production_mesh(multi_pod=multi_pod, dp_tp=dp_tp)
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    key = jax.random.key(0)
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), key)
+    pspecs = param_specs(params_s, mesh, fsdp_params=(cfg.zero_stage >= 3))
+
+    if shape.kind == "train":
+        step, optc = make_train_step(cfg, mesh)
+        opt_s = jax.eval_shape(functools.partial(adamw.init, c=optc), params_s)
+        ospecs = adamw.AdamWState(step=replicated(mesh),
+                                  m=param_specs(opt_s.m, mesh),
+                                  v=param_specs(opt_s.v, mesh))
+        batch_s = input_structs(cfg, shape)
+        bspecs = batch_specs(batch_s, mesh)
+        jitted = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs),
+                         out_shardings=(pspecs, ospecs, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_s, opt_s, batch_s)
+    elif shape.kind == "prefill":
+        batch_s = input_structs(cfg, shape)
+        bspecs = batch_specs(batch_s, mesh)
+        jitted = jax.jit(make_prefill_step(cfg, mesh),
+                         in_shardings=(pspecs, bspecs))
+        lowered = jitted.lower(params_s, batch_s)
+    else:  # decode
+        cache_s, tok_s = decode_structs(cfg, shape)
+        cfg_d = cfg.replace(frontend_tokens=max(shape.seq_len // 4, 8)) \
+            if cfg.family == "encdec" else cfg
+        step = make_serve_step(cfg_d, mesh)
+        cspecs = cache_specs(cache_s, mesh)
+        from repro.models.sharding import fix_divisibility
+        tspec = NamedSharding(mesh, fix_divisibility(
+            P(tuple(a for a in mesh.axis_names if a != "model"), None),
+            tok_s.shape, mesh))
+        jitted = jax.jit(step, in_shardings=(pspecs, cspecs, tspec),
+                         out_shardings=(None, cspecs), donate_argnums=(1,))
+        lowered = jitted.lower(params_s, cache_s, tok_s)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    if dump_hlo:
+        Path(dump_hlo).write_text(hlo)
+    an = analyze_hlo(hlo)   # trip-count-aware (cost_analysis counts scan
+    coll = an["collectives"]  # bodies once — see launch/hlo.py docstring)
+
+    flops = float(an["flops"])
+    bytes_accessed = float(an["hbm_bytes"])
+    wire = float(an["total_wire_bytes"])
+
+    # roofline terms (seconds). cost_analysis is per-partition (the compiled
+    # module is the per-device SPMD program), so divide only where global.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = wire / LINK_BW
+
+    model_flops = 6 * cfg.param_count(active_only=True) * _tokens(shape, cfg)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": int(chips),
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops": flops, "hlo_bytes": bytes_accessed,
+        "hlo_bytes_raw": float(an["hbm_bytes_raw"]),
+        "wire_bytes": wire,
+        "raw_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda kv: kv[1])[0],
+        "model_flops_global": float(model_flops),
+        "model_flops_per_chip": float(model_flops / chips),
+        "useful_flops_ratio": float(model_flops / chips / flops) if flops else None,
+        "memory": mem_d,
+        "collectives": coll,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+    }
+    return rec
+
+
+def _tokens(shape, cfg) -> int:
+    """Tokens processed per step (for MODEL_FLOPS = 6*N*D):
+    train/prefill: B*S (prefill is forward-only: 2*N*D, folded via factor);
+    decode: B tokens."""
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        # forward only = 2ND of the 6ND -> scale token count by 1/3
+        return shape.global_batch * shape.seq_len // 3
+    return shape.global_batch // 3 or 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch §Perf winners (configs.OPTIMIZED)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import OPTIMIZED
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                suffix = "-opt" if args.optimized else ""
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}{suffix}"
+                path = out_dir / f"{tag}.json"
+                ov, dp_tp = (OPTIMIZED.get(arch, ({}, None))
+                             if args.optimized else ({}, None))
+                try:
+                    rec = lower_cell(arch, shape, mp, cfg_overrides=ov or None,
+                                     dp_tp=dp_tp)
+                    if args.optimized and isinstance(rec, dict):
+                        rec["mesh"] = rec.get("mesh", "single") + "-opt"
+                        rec["optimized"] = {"overrides": ov, "dp_tp": dp_tp}
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "fail", "error": str(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                path.write_text(json.dumps(_jsonable(rec), indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"; n_skip += st == "skipped"; n_fail += st == "fail"
+                msg = {"ok": f"compile {rec.get('compile_s')}s flops/chip {rec.get('hlo_flops', 0):.3g}",
+                       "skipped": rec.get("reason", ""),
+                       "fail": rec.get("error", "")[:200]}[st]
+                print(f"[{st:7s}] {tag}: {msg}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,361 @@
+"""Trip-count-aware cost model over the optimized, SPMD-partitioned HLO.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE —
+but jax lowers ``lax.scan`` (our layer stack, q-chunked attention, WKV
+chunks) to while loops, so FLOPs/bytes/collectives would be off by a factor
+of n_layers (verified in EXPERIMENTS §Dry-run).  XLA annotates every scan
+loop with ``backend_config={"known_trip_count":{"n": L}}``, so an
+HLO-text walk can do the multiplication properly:
+
+  flops(while)  = trip * flops(body) + (trip+1) * flops(cond)
+  flops(fusion) = sum of arithmetic inside the fused computation
+  flops(dot)    = 2 * prod(output dims) * prod(contracting dims)
+
+  bytes: TWO models are reported.  ``hbm_bytes_raw`` bills operands+outputs
+  of every scheduled instruction — an upper bound, badly inflated on the
+  CPU backend whose scheduler barely fuses elementwise chains a TPU would
+  fuse.  ``hbm_bytes`` (the roofline input) emulates TPU fusion: traffic is
+  billed only at MATERIALIZATION points — dot/conv/reduce operands+outputs,
+  copies (sharding transitions), dynamic-(update-)slice, gather/scatter,
+  concatenate, sort, collectives, and explicit fusion boundaries; pure
+  elementwise/layout ops are treated as fused into their consumers.  The
+  truth on real hardware lies between the two; both appear in EXPERIMENTS
+  §Roofline and the gap is listed per cell.
+
+  collectives: per-op ring-model wire bytes (see _WIRE below), multiplied
+  by enclosing loop trip counts — this is what makes per-layer all-gathers
+  visible in the roofline.
+
+The parser handles the stable HLO text format: computations headed by
+``%name (params) -> type {`` / ``ENTRY``, instructions ``%n = type op(...)``.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# pure data movement — no arithmetic
+_FREE_FLOPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "transpose", "reshape", "broadcast",
+    "concatenate", "slice", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "pad", "reverse", "iota", "convert",
+    "after-all", "custom-call", "optimization-barrier", "rng-get-and-update-state",
+    "infeed", "outfeed", "partition-id", "replica-id", "domain",
+}
+# ops that don't touch HBM themselves
+_FREE_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "optimization-barrier", "partition-id",
+               "replica-id", "domain", "iota"}
+
+# materialization points for the fusion-emulating byte model (see docstring)
+_MATERIALIZE = {"dot", "convolution", "reduce", "reduce-window", "sort",
+                "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+                "concatenate", "copy", "select-and-scatter", "fft",
+                "triangular-solve", "cholesky", "rng", "rng-bit-generator"}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_OPCALL = re.compile(r"^(.*?)\s([a-z][a-z0-9\-]*)\((.*)$", re.S)
+_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_IOTA_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_LIST_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body)=%([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%([\w.\-]+)")
+_BODY_ATTR = re.compile(r"body=%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Size of a (possibly tuple) type string."""
+    return sum(_numel(m) * _DTYPE_BYTES.get(m.group(1), 0)
+               for m in _SHAPE_TOKEN.finditer(type_str))
+
+
+def _numel(m) -> int:
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(_numel(m) for m in _SHAPE_TOKEN.finditer(type_str))
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)  # name -> type string
+
+
+def _split_top(args: str) -> list:
+    """Split operand list at depth 0 (handles nested parens/braces)."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def parse_module(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _HEADER.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(name=m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    comps["__entry__"] = cur
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        mo = _OPCALL.match(rest)
+        if not mo:
+            continue
+        ty, op, tail = mo.group(1).strip(), mo.group(2), mo.group(3)
+        # split tail into (operand args up to matching paren, attrs)
+        depth, j = 1, 0
+        while j < len(tail) and depth:
+            if tail[j] == "(":
+                depth += 1
+            elif tail[j] == ")":
+                depth -= 1
+            j += 1
+        args, attrs = tail[: j - 1], tail[j:]
+        operands = [a.split()[-1].lstrip("%") for a in _split_top(args)
+                    if a and "%" in a]
+        cur.instrs.append(Instr(name, ty, op, operands, attrs, line))
+        cur.types[name] = ty
+    return comps
+
+
+def _group_size(attrs: str) -> int:
+    m = _IOTA_GROUPS.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    if "source_target_pairs" in attrs:
+        return 2
+    return 1
+
+
+def _wire_bytes(op: str, s: float, n: int) -> float:
+    if op == "all-gather":
+        return s * (n - 1)
+    if op == "reduce-scatter":
+        return s * (n - 1) / max(n, 1)
+    if op == "all-reduce":
+        return 2.0 * s * (n - 1) / max(n, 1)
+    if op == "all-to-all":
+        return s * (n - 1) / max(n, 1)
+    return float(s)  # collective-permute
+
+
+class HloCost:
+    """Recursive, memoized cost over the computation graph."""
+
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self._memo: dict[str, tuple] = {}
+        self._ew_memo: dict[str, bool] = {}
+
+    def _operand_bytes(self, comp: Computation, ins: Instr) -> float:
+        return float(sum(_type_bytes(comp.types.get(o, "")) for o in ins.operands))
+
+    def _pure_elementwise(self, cname: str) -> bool:
+        """True if a computation contains only elementwise/layout ops — the
+        CPU backend wraps every such op in its own kLoop fusion, which a TPU
+        would fuse into neighbours, so these don't count as HBM traffic in
+        the fusion-emulating byte model."""
+        if cname in self._ew_memo:
+            return self._ew_memo[cname]
+        comp = self.comps.get(cname)
+        ok = comp is not None
+        heavy = {"dot", "convolution", "reduce", "reduce-window", "sort",
+                 "gather", "scatter", "dynamic-update-slice", "while",
+                 "fusion", "call", "conditional",
+                 "select-and-scatter"} | set(_COLLECTIVES)
+        if comp is not None:
+            for ins in comp.instrs:
+                base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+                if base in heavy:
+                    ok = False
+                    break
+        self._ew_memo[cname] = ok
+        return ok
+
+    def cost(self, cname: str) -> tuple:
+        """-> (flops, hbm_bytes_fused, hbm_bytes_raw,
+               {op: {count, wire_bytes, operand_bytes}})"""
+        if cname in self._memo:
+            return self._memo[cname]
+        comp = self.comps.get(cname)
+        if comp is None:
+            return 0.0, 0.0, 0.0, {}
+        flops = 0.0
+        bf = 0.0   # fusion-emulating byte model (roofline input)
+        br = 0.0   # raw every-op upper bound
+        coll: dict = defaultdict(lambda: defaultdict(float))
+
+        def acc(sub, mult=1.0):
+            nonlocal flops, bf, br
+            f, b1, b2, c = sub
+            flops += mult * f
+            bf += mult * b1
+            br += mult * b2
+            for k, v in c.items():
+                for kk, vv in v.items():
+                    coll[k][kk] += mult * vv
+
+        for ins in comp.instrs:
+            op = ins.opcode
+            out_b = _type_bytes(ins.type_str)
+            out_e = _type_elems(ins.type_str)
+            io_b = self._operand_bytes(comp, ins) + out_b
+            if op == "while":
+                trip = 1
+                mt = _TRIP.search(ins.attrs)
+                if mt:
+                    trip = max(int(mt.group(1)), 1)
+                body = _BODY_ATTR.search(ins.attrs)
+                cond = _COND_ATTR.search(ins.attrs)
+                if body:
+                    acc(self.cost(body.group(1)), trip)
+                if cond:
+                    acc(self.cost(cond.group(1)), trip + 1)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                mcall = _CALL_ATTR.search(ins.attrs)
+                fusable = False
+                if mcall:
+                    f, _, _, c = self.cost(mcall.group(1))
+                    flops += f
+                    for k, v in c.items():
+                        for kk, vv in v.items():
+                            coll[k][kk] += vv
+                    fusable = op == "fusion" and self._pure_elementwise(mcall.group(1))
+                if not fusable:  # real materialization boundary
+                    bf += io_b
+                br += io_b
+                continue
+            if op == "conditional":
+                for mm in re.finditer(r"%([\w.\-]+)", ins.attrs):
+                    if mm.group(1) in self.comps:
+                        acc(self.cost(mm.group(1)))
+                continue
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                s = self._operand_bytes(comp, ins)
+                n = _group_size(ins.attrs)
+                coll[base_op]["count"] += 1
+                coll[base_op]["operand_bytes"] += s
+                coll[base_op]["wire_bytes"] += _wire_bytes(base_op, s, n)
+                bf += s + out_b
+                br += s + out_b
+                continue
+            if op == "dot":
+                k = 1
+                mc = _CONTRACT.search(ins.attrs)
+                if mc and ins.operands:
+                    lhs_ty = comp.types.get(ins.operands[0], "")
+                    ms = _SHAPE_TOKEN.search(lhs_ty)
+                    if ms:
+                        dims = [int(d) for d in ms.group(2).split(",") if d]
+                        for ci in mc.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                k *= dims[int(ci)]
+                flops += 2.0 * out_e * k
+                bf += io_b
+                br += io_b
+                continue
+            if op in ("reduce", "reduce-window", "select-and-scatter"):
+                flops += float(sum(_type_elems(comp.types.get(o, ""))
+                                   for o in ins.operands))
+                bf += io_b
+                br += io_b
+                continue
+            if op in _MATERIALIZE:
+                flops += 2.0 * out_e if op == "convolution" else 0.0
+                bf += io_b
+                br += io_b
+                continue
+            if op in _FREE_FLOPS:
+                if op not in _FREE_BYTES:
+                    br += io_b
+                continue
+            # generic elementwise arithmetic: flops yes, fused-bytes no
+            flops += float(out_e)
+            br += io_b
+        res = (flops, bf, br, {k: dict(v) for k, v in coll.items()})
+        self._memo[cname] = res
+        return res
+
+
+def analyze(text: str) -> dict:
+    hc = HloCost(text)
+    entry = "__entry__"
+    if entry not in hc.comps:  # fall back: biggest computation
+        entry = max(hc.comps, key=lambda c: len(hc.comps[c].instrs))
+    flops, bf, br, coll = hc.cost(entry)
+    total_wire = sum(v.get("wire_bytes", 0.0) for v in coll.values())
+    return {"flops": flops, "hbm_bytes": bf, "hbm_bytes_raw": br,
+            "collectives": coll, "total_wire_bytes": total_wire}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Back-compat shim over analyze()."""
+    a = analyze(hlo_text)
+    out = dict(a["collectives"])
+    out["total_wire_bytes"] = a["total_wire_bytes"]
+    return out

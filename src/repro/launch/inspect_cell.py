@@ -1,0 +1,100 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimbing helper: lower one cell (optionally with config overrides),
+dump the partitioned HLO, and print the top collectives / dots / copies by
+trip-count-weighted bytes.
+
+  PYTHONPATH=src python -m repro.launch.inspect_cell qwen2-72b train_4k \
+      [--multi] [--set remat_policy=dots] [--top 15]
+"""
+import argparse
+import json
+
+from repro.launch import hlo as H
+from repro.launch.dryrun import lower_cell
+
+
+def walk_detail(text: str, kinds=("collective", "dot", "copy", "fusion")):
+    hc = H.HloCost(text)
+    rows = []
+
+    def walk(cname, mult, depth=0):
+        comp = hc.comps.get(cname)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.opcode
+            out_b = H._type_bytes(ins.type_str)
+            io_b = hc._operand_bytes(comp, ins) + out_b
+            if op == "while":
+                trip = 1
+                mt = H._TRIP.search(ins.attrs)
+                if mt:
+                    trip = max(int(mt.group(1)), 1)
+                b = H._BODY_ATTR.search(ins.attrs)
+                if b:
+                    walk(b.group(1), mult * trip, depth + 1)
+                continue
+            if op in ("fusion", "call"):
+                m = H._CALL_ATTR.search(ins.attrs)
+                if m and not hc._pure_elementwise(m.group(1)):
+                    rows.append(("fusion", mult * io_b, mult, ins.line[:170]))
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if base in H._COLLECTIVES:
+                s = hc._operand_bytes(comp, ins)
+                n = H._group_size(ins.attrs)
+                wire = H._wire_bytes(base, s, n)
+                rows.append((base, mult * wire, mult, ins.line[:170]))
+            elif op == "dot":
+                rows.append(("dot", mult * io_b, mult, ins.line[:170]))
+            elif op == "copy":
+                rows.append(("copy", mult * io_b, mult, ins.line[:170]))
+
+    walk("__entry__", 1.0)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--dp-tp", default=None,
+                    help="logical mesh reshape, e.g. 64,4")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--kind", default=None,
+                    help="filter: all-gather/all-reduce/dot/copy/fusion/...")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    hlo_path = f"/tmp/{args.arch}_{args.shape}.hlo"
+    dp_tp = tuple(int(v) for v in args.dp_tp.split(",")) if args.dp_tp else None
+    rec = lower_cell(args.arch, args.shape, args.multi, dump_hlo=hlo_path,
+                     cfg_overrides=overrides or None, dp_tp=dp_tp)
+    for k in ("hlo_flops", "hlo_bytes", "wire_bytes", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "useful_flops_ratio"):
+        print(f"{k:22s} {rec.get(k)}")
+    print(f"collectives: { {k: (v['count'], round(v['wire_bytes']/1e9, 2)) for k, v in rec.get('collectives', {}).items()} }")
+    print(f"\nHLO at {hlo_path}; top-{args.top} contributors:")
+    rows = walk_detail(open(hlo_path).read())
+    if args.kind:
+        rows = [r for r in rows if r[0] == args.kind]
+    rows.sort(key=lambda r: -r[1])
+    for kind, b, mult, line in rows[: args.top]:
+        print(f"  {kind:12s} {b/1e9:9.2f} GB x{mult:<5.0f} {line[:130]}")
+
+
+if __name__ == "__main__":
+    main()

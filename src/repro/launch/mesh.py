@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+
+Single pod:  (data=16, model=16)            = 256 chips (TPU v5e pod slice)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips; the ``pod`` axis is
+the slow (DCN/ICI-bridge) axis — only data parallelism (gradient
+all-reduce, optionally compressed) crosses it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, dp_tp: tuple | None = None):
+    """dp_tp: optional (data, model) LOGICAL reshape of the same chips —
+    the §Perf re-mesh lever (e.g. (64, 4) trades TP degree for DP width on
+    the identical 256-chip pod; both embed on the 2D ICI torus)."""
+    if dp_tp is not None:
+        d, m = dp_tp
+        shape = (2, d, m) if multi_pod else (d, m)
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_site_mesh(n_sites: int | None = None):
+    """1-D mesh over ``sites`` for the paper's distributed clustering job
+    (Algorithm 3): one site per device."""
+    n = n_sites or len(jax.devices())
+    return jax.make_mesh((n,), ("sites",))

@@ -1,0 +1,90 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Four shapes per LM arch (40 cells):
+  train_4k     seq 4096,   batch 256  -> train_step
+  prefill_32k  seq 32768,  batch 32   -> prefill_step
+  decode_32k   seq 32768,  batch 128  -> serve_step (1 token, cache = seq)
+  long_500k    seq 524288, batch 1    -> serve_step; SUB-QUADRATIC archs only
+               (rwkv6 / rglru hybrid / SWA); full-attention archs record the
+               skip (DESIGN §5).
+
+``[audio]``/``[vlm]`` frontends are stubs: specs provide precomputed frame /
+patch embeddings. Encoder frames = seq_len // 4 (conv downsampling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full attention is O(S^2): long_500k runs only for SSM/hybrid/SWA archs"
+    return True, ""
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the model-input batch of a train/prefill cell."""
+    B, L = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {
+            "frames": S((B, max(L // 4, 8), cfg.frontend_dim), jnp.float32),
+            "tokens": S((B, L), jnp.int32),
+        }
+    if cfg.frontend == "vlm_patches":
+        s_text = L - cfg.frontend_tokens
+        assert s_text > 0
+        return {
+            "patches": S((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32),
+            "tokens": S((B, s_text), jnp.int32),
+        }
+    return {"tokens": S((B, L), jnp.int32)}
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    """(cache structs, token struct) for a decode cell: one new token with a
+    cache that has already absorbed seq_len tokens."""
+    from repro.models.transformer import init_cache
+    B, L = shape.global_batch, shape.seq_len
+    cfg_d = cfg
+    if cfg.family == "encdec":
+        cfg_d = cfg.replace(frontend_tokens=max(L // 4, 8))
+    cache = jax.eval_shape(lambda: init_cache(cfg_d, B, L))
+    tokens = S((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def concrete_batch(cfg: ModelConfig, seq_len: int, batch: int, key) -> dict:
+    """Concrete small batch for smoke tests/examples (same layout as
+    input_structs)."""
+    structs = input_structs(cfg, ShapeSpec("adhoc", seq_len, batch, "train"))
+    out = {}
+    for k, st in structs.items():
+        key, sk = jax.random.split(key)
+        if st.dtype == jnp.int32:
+            out[k] = jax.random.randint(sk, st.shape, 0, cfg.vocab)
+        else:
+            out[k] = jax.random.normal(sk, st.shape, st.dtype)
+    return out

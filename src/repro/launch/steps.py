@@ -1,0 +1,61 @@
+"""Step builders: train_step (fwd+bwd+AdamW), prefill_step, serve_step.
+
+These are the programs the dry-run lowers and the launchers run; the same
+builders serve single-device smoke tests (mesh=None).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ShardCtx
+from repro.models.sharding import fsdp_axes
+from repro.models.transformer import (forward_decode, forward_prefill,
+                                      forward_train)
+from repro.optim import adamw
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh | None) -> ShardCtx:
+    if mesh is None:
+        return ShardCtx(mesh=None)
+    return ShardCtx(mesh=mesh, batch=fsdp_axes(mesh), model="model",
+                    seq_shard=cfg.seq_shard_activations)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None,
+                    optc: adamw.AdamWConfig | None = None):
+    optc = optc or adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    ctx = make_ctx(cfg, mesh)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = forward_train(p, batch, cfg, ctx)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_state, om = adamw.apply(params, grads, opt_state, optc)
+        return new_params, new_state, dict(metrics, loss=loss, **om)
+
+    return train_step, optc
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None):
+    ctx = make_ctx(cfg, mesh)
+
+    def prefill_step(params, batch):
+        return forward_prefill(params, batch, cfg, ctx)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh | None):
+    ctx = make_ctx(cfg, mesh)
+
+    def serve_step(params, cache, tokens):
+        return forward_decode(params, cache, tokens, cfg, ctx)
+
+    return serve_step

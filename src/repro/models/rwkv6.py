@@ -1,0 +1,204 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay + squared-ReLU channel mix.
+
+TPU adaptation (DESIGN §5): the GPU reference uses a custom CUDA recurrence;
+here the WKV6 recurrence is evaluated CHUNKWISE so the bulk of the work is
+batched einsums (MXU) instead of a length-T sequential loop:
+
+  per chunk of c tokens (c = cfg.wkv_chunk, default 16):
+    Lin  = cumsum(log w)                       (B,H,c,K)   f32, log-space
+    A[t,tau] = exp(Lprev[t] - Lin[tau])        decay tau+1..t-1, masked tau<t
+    o_intra  = ((r*A*k) summed over K) @ v     two einsums
+    o_inter  = (r * exp(Lprev)) @ S            carried state (B,H,K,V)
+    S'       = exp(Lin[-1]) * S + (k * exp(Lin[-1]-Lin)) @ v
+
+Log-space keeps everything in (0,1] — no under/overflow for any decay
+(the GLA-style q~/k~ factorization overflows for strong decays; the small-c
+direct form does not, at the cost of a (c,c,K) intra tensor, which at c=16
+is ~67MB transient for a 7B config — a deliberate trade recorded in
+EXPERIMENTS §Perf).
+
+``rwkv_recurrent`` is the step-by-step oracle used for decode (O(1) state —
+this is why rwkv6 runs the long_500k shape) and for tests.
+
+Simplification vs the full Finch block (noted in DESIGN): token-shift uses
+static learned lerp (mu) rather than the data-dependent ddlerp LoRA; the
+decay LoRA (the paper's headline data-dependence) IS implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, ShardCtx, dense_init, rmsnorm, rmsnorm_init
+
+
+def rwkv_layer_init(key, cfg: ModelConfig, dtype) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    ks = jax.random.split(key, 12)
+    lora = 64
+    return {
+        "ln1": rmsnorm_init(D),
+        "ln2": rmsnorm_init(D),
+        "tmix": {
+            "mu": jnp.full((5, D), 0.5, jnp.float32),   # r,k,v,g,w shifts
+            "wr": dense_init(ks[0], D, D, dtype),
+            "wk": dense_init(ks[1], D, D, dtype),
+            "wv": dense_init(ks[2], D, D, dtype),
+            "wg": dense_init(ks[3], D, D, dtype),
+            "wo": dense_init(ks[4], D, D, dtype),
+            "w0": jnp.full((H, hd), -1.0, jnp.float32),  # base log-log decay
+            "wa": dense_init(ks[5], D, lora, jnp.float32, 0.1),
+            "wb": dense_init(ks[6], lora, D, jnp.float32, 0.1),
+            "u": jnp.zeros((H, hd), jnp.float32),        # bonus
+            "ln_out": rmsnorm_init(D),
+        },
+        "cmix": {
+            "mu": jnp.full((2, D), 0.5, jnp.float32),    # k,r shifts
+            "wk": dense_init(ks[7], D, F, dtype),
+            "wv": dense_init(ks[8], F, D, dtype),
+            "wr": dense_init(ks[9], D, D, dtype),
+        },
+    }
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} (prev carries the last token of the previous
+    call; zeros for the first)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def wkv_chunked(r, k, v, lw, u, s0, chunk: int, inner_remat: bool = False,
+                compute_dtype=jnp.float32):
+    """r,k,v,lw: (B, T, H, K); u: (H, K); s0: (B, H, K, V). Returns (o, sT)."""
+    B, T, H, K = r.shape
+    c = min(chunk, T)
+    if T % c:  # neutral padding: k=v=r=0 contribute nothing, lw=0 => decay 1
+        pad = c - T % c
+        r, k, v, lw = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (r, k, v, lw))
+        o, sT = wkv_chunked(r, k, v, lw, u, s0, chunk, inner_remat,
+                            compute_dtype)
+        return o[:, :T], sT
+    nc = T // c
+    cdt = jnp.dtype(compute_dtype)
+
+    def to_chunks(a):
+        return a.reshape(B, nc, c, H, K).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,K)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)                  # tau < t
+
+    def body(s, inp):
+        rr, kk, vv, ll = (a.astype(jnp.float32) for a in inp)      # (B,H,c,K)
+        lin = jnp.cumsum(ll, axis=2)                               # f32 always
+        lprev = lin - ll
+        # intra-chunk: A[t,tau,i] = exp(lprev[t,i] - lin[tau,i]), tau < t
+        a = jnp.exp(lprev[:, :, :, None, :] - lin[:, :, None, :, :])
+        a = jnp.where(mask[None, None, :, :, None], a, 0.0).astype(cdt)
+        # the big-operand einsums run in compute_dtype (f32 accumulate)
+        w_ts = jnp.einsum("bhti,bhtsi,bhsi->bhts", rr.astype(cdt), a,
+                          kk.astype(cdt), preferred_element_type=jnp.float32)
+        o = jnp.einsum("bhts,bhsv->bhtv", w_ts.astype(cdt), vv.astype(cdt),
+                       preferred_element_type=jnp.float32)
+        # bonus (current token)
+        o += (rr * u[None, :, None, :] * kk).sum(-1, keepdims=True) * vv
+        # inter-chunk from carried state
+        o += jnp.einsum("bhti,bhiv->bhtv", rr * jnp.exp(lprev), s)
+        # state update (f32: carried accuracy)
+        dec_all = jnp.exp(lin[:, :, -1:, :])                       # (B,H,1,K)
+        s = s * dec_all.squeeze(2)[..., None] + jnp.einsum(
+            "bhsi,bhsv->bhiv", kk * jnp.exp(lin[:, :, -1:, :] - lin), vv)
+        return s, o
+
+    if inner_remat:
+        # recompute the (c, c, K) intra-chunk tensors in backward instead of
+        # saving them for all nc chunks (§Perf rwkv memory lever)
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    sT, oc = jax.lax.scan(body, s0.astype(jnp.float32), (rc, kc, vc, lwc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(B, T, H, K)
+    return o.astype(r.dtype), sT
+
+
+def wkv_recurrent(r, k, v, lw, u, s0):
+    """Step-by-step oracle / decode path. Same shapes as wkv_chunked."""
+    def step(s, inp):
+        rr, kk, vv, ll = (a.astype(jnp.float32) for a in inp)      # (B,H,K)
+        o = jnp.einsum("bhi,bhiv->bhv", rr, s + u[None, :, :, None] * kk[..., None] * vv[:, :, None, :])
+        s = s * jnp.exp(ll)[..., None] + kk[..., None] * vv[:, :, None, :]
+        return s, o
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, lw))     # (T,B,H,K)
+    sT, o = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), sT
+
+
+def rwkv_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx,
+               state: Params | None = None):
+    """One RWKV6 block. state = {"ts_t","ts_c": (B,D), "s": (B,H,K,V)} for
+    decode; None for training (zero-init, discarded)."""
+    B, T, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    if state is None:
+        state = {
+            "ts_t": jnp.zeros((B, D), x.dtype),
+            "ts_c": jnp.zeros((B, D), x.dtype),
+            "s": jnp.zeros((B, H, hd, hd), jnp.float32),
+        }
+
+    # ---- time mix ----
+    tm = p["tmix"]
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    xs = _shift(xn, state["ts_t"])
+    mu = tm["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (xn + mu[i] * (xs - xn) for i in range(5))
+    r = (xr @ tm["wr"]).reshape(B, T, H, hd)
+    kk = (xk @ tm["wk"]).reshape(B, T, H, hd)
+    vv = (xv @ tm["wv"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ tm["wg"])
+    # data-dependent decay (the Finch signature): log w = -exp(w0 + lora(x))
+    lora = jnp.tanh(xw.astype(jnp.float32) @ tm["wa"]) @ tm["wb"]
+    lw = -jnp.exp(tm["w0"].reshape(1, 1, D) + lora).reshape(B, T, H, hd)
+    if ctx.mesh is not None:
+        r, kk, vv = (ctx.hint(a, ctx.batch, None, ctx.model, None) for a in (r, kk, vv))
+        lw = ctx.hint(lw, ctx.batch, None, ctx.model, None)
+    if T == 1:
+        o, sT = wkv_recurrent(r, kk, vv, lw, tm["u"], state["s"])
+    elif cfg.wkv_use_pallas:
+        # Pallas chunk kernel (VMEM-resident intra tensors, custom VJP);
+        # flatten (B, H) -> BH rows, per-row u
+        from repro.kernels.wkv.ops import wkv_forward
+        fl = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+        u_bh = jnp.tile(tm["u"].reshape(H, hd), (B, 1))
+        o_f, s_f = wkv_forward(fl(r), fl(kk), fl(vv), fl(lw), u_bh,
+                               state["s"].reshape(B * H, hd, hd),
+                               cfg.wkv_chunk)
+        o = o_f.reshape(B, H, T, hd).transpose(0, 2, 1, 3)
+        sT = s_f.reshape(B, H, hd, hd)
+    else:
+        o, sT = wkv_chunked(r, kk, vv, lw, tm["u"], state["s"], cfg.wkv_chunk,
+                            cfg.wkv_inner_remat,
+                            jnp.dtype(cfg.wkv_compute_dtype))
+    o = rmsnorm(tm["ln_out"], o.reshape(B, T, D), cfg.norm_eps) * g
+    x = x + ctx.residual(o @ tm["wo"])
+
+    # ---- channel mix ----
+    cm = p["cmix"]
+    xn2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    xs2 = _shift(xn2, state["ts_c"])
+    cmu = cm["mu"].astype(x.dtype)
+    xk2 = xn2 + cmu[0] * (xs2 - xn2)
+    xr2 = xn2 + cmu[1] * (xs2 - xn2)
+    kk2 = jnp.square(jax.nn.relu(xk2 @ cm["wk"]))
+    if ctx.mesh is not None:
+        kk2 = ctx.hint(kk2, ctx.batch, None, ctx.model)
+    ffn = jax.nn.sigmoid(xr2 @ cm["wr"]) * (kk2 @ cm["wv"])
+    x = x + ctx.residual(ffn)
+
+    new_state = {"ts_t": xn[:, -1, :], "ts_c": xn2[:, -1, :], "s": sT}
+    return x, new_state

@@ -1,0 +1,187 @@
+"""Parameter / optimizer-state / batch PartitionSpecs.
+
+Scheme (DESIGN §6): TP over ``model`` for heads / ffn / vocab / experts,
+ZeRO-3-style FSDP over the batch axes (``data``, plus ``pod`` multi-pod) on
+the complementary dim.  Rules are name+rank based so the one function covers
+all five families; stacked layer params get a leading None for the scan dim.
+
+Optimizer moments inherit the param specs verbatim (same shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    """Batch-like axes = everything that isn't the model axis."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _leaf_spec(flat_name: str, ndim: int, fsdp, model="model") -> P:
+    """Spec for an UNSTACKED leaf (rank without the layer-stack dims)."""
+    n = flat_name
+    last = n.rsplit("/", 1)[-1]  # exact leaf name (endswith("u") would
+    #                              otherwise swallow "mu" etc.)
+    # --- embeddings / head ---
+    if n.endswith("embed/table"):
+        return P(model, fsdp)
+    if n.endswith("lm_head"):
+        return P(fsdp, model)
+    if "frontend" in n:
+        return P(None, fsdp)
+    # --- norms / small vectors / scalars ---
+    if ndim <= 1:
+        return P(*([None] * ndim))
+    # --- attention ---
+    if n.endswith(("attn/wq", "attn/wk", "attn/wv", "xattn/wq", "xattn/wk", "xattn/wv")):
+        return P(fsdp, model)
+    if n.endswith(("attn/wo", "xattn/wo")):
+        return P(model, fsdp)
+    # --- moe experts: EP over model, FSDP over the expert-internal in-dim ---
+    if n.endswith(("we_g", "we_i")):
+        return P(model, fsdp, None)
+    if n.endswith("we_o"):
+        return P(model, None, fsdp)
+    if n.endswith("router"):
+        return P(fsdp, None)
+    # --- mlp / rwkv cmix / rglru projections: in->hidden cols on model ---
+    if n.endswith(("mlp/wi", "mlp/wg", "shared/wi", "shared/wg", "cmix/wk",
+                   "w_x", "w_y", "tmix/wr", "tmix/wk", "tmix/wv", "tmix/wg",
+                   "cmix/wr")):
+        return P(fsdp, model)
+    if n.endswith(("mlp/wo", "shared/wo", "cmix/wv", "w_out", "tmix/wo")):
+        return P(model, fsdp)
+    if n.endswith(("tmix/wa",)):
+        return P(fsdp, None)
+    if n.endswith(("tmix/wb",)):
+        return P(None, fsdp)
+    if last == "conv":
+        return P(None, model)
+    if last in ("w0", "u"):      # (H, hd)
+        return P(model, None)
+    if last == "mu":             # (5, D)
+        return P(None, None)
+    # fallback: FSDP on dim 0
+    return P(*([fsdp] + [None] * (ndim - 1)))
+
+
+def _stack_depth(path) -> int:
+    """How many leading dims are layer-stack dims: one per vmap'd level.
+    Heuristic: keys named 'layers'/'groups'/'tail'/'enc_layers'/'dec_layers'
+    add one; a nested 'recs'/'dense' stack adds another."""
+    names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+    depth = 0
+    for nm in names:
+        if nm in ("layers", "groups", "tail", "enc_layers", "dec_layers"):
+            depth += 1
+        if nm in ("recs", "dense"):
+            depth += 1
+    return depth
+
+
+def fix_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from any spec entry whose dim they don't divide
+    (e.g. vocab=256206 on a 16-way axis, or batch=1 decode): jit input
+    shardings require even tiling."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        prod = 1
+        for a in axes:
+            if shape[d] % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def _strip_axes(spec: P, axes: set) -> P:
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        es = entry if isinstance(entry, tuple) else (entry,)
+        keep = tuple(a for a in es if a not in axes)
+        out.append(keep if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def param_specs(params_shape, mesh: Mesh, *, fsdp_params: bool = True):
+    """Map a pytree of ShapeDtypeStructs (or arrays) -> pytree of
+    NamedShardings.
+
+    fsdp_params=False is ZeRO-2: weights stay TP-sharded-only (resident, no
+    per-layer all-gather); optimizer moments keep the full FSDP sharding via
+    a separate param_specs(..., fsdp_params=True) call (see dryrun)."""
+    fsdp_t = fsdp_axes(mesh)
+    fsdp = fsdp_t if len(fsdp_t) > 1 else fsdp_t[0]
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        flat = "/".join(names)
+        depth = _stack_depth(path)
+        nd = len(leaf.shape) - depth
+        s = _leaf_spec(flat, nd, fsdp)
+        if not fsdp_params:
+            s = _strip_axes(s, set(fsdp_t))
+        full = P(*([None] * depth + list(s)))
+        return NamedSharding(mesh, fix_divisibility(full, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Input batch: leading dim over all batch axes."""
+    bd = fsdp_axes(mesh)
+
+    def spec(path, leaf):
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        full = P(bd, *([None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, fix_divisibility(full, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cache_shape, mesh: Mesh, cfg=None):
+    """KV caches: batch dim over batch axes, head/width dims over model where
+    profitable. Layer-stacked leading dims stay unsharded."""
+    bd = fsdp_axes(mesh)
+
+    def mk(pspec, shape):
+        return NamedSharding(mesh, fix_divisibility(pspec, shape, mesh))
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        nm = names[-1] if names else ""
+        shape = leaf.shape
+        if nm in ("kpos", "pos") or len(shape) <= 1:
+            return mk(P(), shape)
+        if nm in ("k", "v", "ck", "cv"):
+            # (L[, sub], B, W, Hkv, hd): shard B over batch axes; shard W
+            # (the long dim) over model — decode attention reduces over W.
+            lead = len(shape) - 4
+            return mk(P(*([None] * lead), bd, "model", None, None), shape)
+        if nm == "s":         # rwkv state (L,B,H,K,V)
+            return mk(P(None, bd, "model", None, None), shape)
+        if nm in ("ts_t", "ts_c"):           # (L, B, D)
+            return mk(P(None, bd, None), shape)
+        if nm == "h":                        # (G, rpa, B, W)
+            return mk(P(None, None, bd, "model"), shape)
+        if nm == "tail_h":                   # (tail, B, W)
+            return mk(P(None, bd, "model"), shape)
+        if nm == "conv":                     # (G, rpa, B, 3, W)
+            return mk(P(None, None, bd, None, "model"), shape)
+        if nm == "tail_conv":                # (tail, B, 3, W)
+            return mk(P(None, bd, None, "model"), shape)
+        return mk(P(*([None] * len(shape))), shape)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

@@ -1,0 +1,66 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two schemes, both with error feedback:
+
+* bf16 — cast grads to bf16 before the all-reduce (2x wire bytes saved);
+  residual = fp32 - bf16 accumulates locally and is re-added next step.
+* int8 — per-leaf symmetric quantization (scale = max|g|/127); 4x saved.
+
+On a GSPMD train_step the data-parallel all-reduce is implicit, so the
+compression hook is exposed as a pair (encode, decode) applied around the
+`jax.lax.pmean`/psum in the shard_map training path (runtime/robust_agg,
+examples/robust_training) and is lowered in the dry-run's multi-pod mesh via
+the `grad_compression` train-step option (cast -> pseudo-allreduce -> cast).
+
+Error feedback keeps the scheme unbiased over time: e_{t+1} = g_t - Q(g_t + e_t).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # same structure as grads, fp32
+
+
+def init_ef(grads_like) -> EFState:
+    return EFState(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads_like))
+
+
+def encode_bf16(grads, ef: EFState):
+    def enc(g, r):
+        gf = g.astype(jnp.float32) + r
+        q = gf.astype(jnp.bfloat16)
+        return q, gf - q.astype(jnp.float32)
+    pairs = jax.tree.map(enc, grads, ef.residual)
+    q = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return q, EFState(r)
+
+
+def decode_bf16(q):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), q)
+
+
+def encode_int8(grads, ef: EFState):
+    def enc(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.abs(gf).max(), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return (q, scale), gf - deq
+    pairs = jax.tree.map(enc, grads, ef.residual)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
+    q = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return q, EFState(r)
+
+
+def decode_int8(q):
+    def dec(pair):
+        qq, scale = pair
+        return qq.astype(jnp.float32) * scale
+    return jax.tree.map(dec, q, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,108 @@
+"""Elastic training runtime: checkpoint/restart + mesh shrink/grow on
+(simulated) node failure, deterministic data replay.
+
+The contract with real hardware: a node failure surfaces as an exception
+from the step function (XLA raises on a dead peer) or as a missing
+heartbeat; the runner then (1) rebuilds the largest usable mesh from the
+surviving devices, (2) re-jits the step for the new mesh, (3) restores the
+last published checkpoint with cross-mesh resharding (checkpoint/manager
+stores leaves unsharded), and (4) replays the data cursor — the pipeline is
+stateless-addressable so `step` is the only cursor (data/tokens.py).
+
+This module is hardware-agnostic: `DeviceFailure` is raised by the fault
+injector in tests/examples, and by a heartbeat watchdog in a real
+deployment.  Global batch is preserved across re-meshes (per-device batch
+rescales), so the training trajectory stays comparable.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+class DeviceFailure(RuntimeError):
+    """Raised when a device/host is lost (injected in tests; mapped from
+    runtime errors in deployment)."""
+
+
+@dataclass
+class ElasticConfig:
+    ckpt_every: int = 20
+    max_failures: int = 8
+    min_devices: int = 1
+
+
+@dataclass
+class ElasticRunner:
+    make_step: Callable          # (mesh) -> step_fn(state, batch) -> state, metrics
+    init_state: Callable         # (mesh) -> state pytree
+    state_shardings: Callable    # (mesh, state_like) -> shardings pytree
+    data_fn: Callable            # (step) -> batch (numpy, global)
+    ckpt: CheckpointManager
+    cfg: ElasticConfig = field(default_factory=ElasticConfig)
+
+    def _usable_devices(self, devices):
+        """Largest power-of-two prefix (keeps meshes well-shaped)."""
+        n = 1 << int(math.log2(max(len(devices), 1)))
+        return devices[:n]
+
+    def make_mesh(self, devices):
+        devs = self._usable_devices(devices)
+        return jax.make_mesh((len(devs),), ("data",), devices=devs)
+
+    def run(self, n_steps: int, devices=None, fail_at: dict | None = None):
+        """fail_at: {step: n_devices_to_kill} fault injection for tests.
+        Returns (state, log)."""
+        devices = list(devices or jax.devices())
+        fail_at = fail_at or {}
+        log = {"remesh_steps": [], "device_counts": [], "losses": []}
+
+        mesh = self.make_mesh(devices)
+        step_fn = self.make_step(mesh)
+        state = self.init_state(mesh)
+        start = 0
+        if self.ckpt.latest_step() is not None:
+            state, start = self.ckpt.restore(
+                state, shardings=self.state_shardings(mesh, state))
+            start += 1
+
+        step = start
+        failures = 0
+        while step < n_steps:
+            try:
+                if step in fail_at:
+                    kill = fail_at.pop(step)
+                    devices = devices[: max(len(devices) - kill,
+                                            self.cfg.min_devices)]
+                    raise DeviceFailure(f"lost {kill} devices at step {step}")
+                batch = self.data_fn(step)
+                state, metrics = step_fn(state, batch)
+                log["losses"].append(float(metrics.get("loss", np.nan)))
+                log["device_counts"].append(mesh.devices.size)
+                if step % self.cfg.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+                step += 1
+            except DeviceFailure as e:
+                failures += 1
+                if failures > self.cfg.max_failures:
+                    raise RuntimeError("too many failures") from e
+                # --- elastic re-mesh ---
+                mesh = self.make_mesh(devices)
+                step_fn = self.make_step(mesh)
+                state_like = self.init_state(mesh)
+                try:
+                    state, last = self.ckpt.restore(
+                        state_like, shardings=self.state_shardings(mesh, state_like))
+                    step = last + 1
+                except FileNotFoundError:
+                    state, step = state_like, 0
+                log["remesh_steps"].append(step)
+        self.ckpt.wait()
+        return state, log

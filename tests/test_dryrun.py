@@ -1,0 +1,49 @@
+"""Dry-run integration: a representative cell per program kind compiles on
+the production mesh in a 512-virtual-device subprocess (XLA flag isolation),
+and the recorded roofline terms are sane."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, mesh="single"):
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", "/tmp/dryrun_test"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-1000:])
+    tag = f"{arch}__{shape}__{mesh}"
+    return json.loads(open(f"/tmp/dryrun_test/{tag}.json").read())
+
+
+@pytest.mark.slow
+def test_train_cell_compiles_single_pod():
+    rec = _run_cell("h2o-danube-1.8b", "train_4k")
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["hlo_flops"] > rec["model_flops_per_chip"] * 0.5
+    assert 0.05 < rec["useful_flops_ratio"] < 1.5
+    assert rec["collectives"]["all-reduce"]["count"] > 0
+    # parameter+optimizer state fits HBM
+    assert rec["memory"]["argument_bytes"] < 16e9
+
+
+@pytest.mark.slow
+def test_decode_cell_compiles_multi_pod():
+    rec = _run_cell("h2o-danube-1.8b", "decode_32k", mesh="multi")
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 512
+
+
+@pytest.mark.slow
+def test_long_context_skip_policy():
+    rec = _run_cell("qwen2.5-32b", "long_500k")
+    assert rec["status"] == "skipped"
+    rec2 = _run_cell("rwkv6-7b", "long_500k")
+    assert rec2["status"] == "ok"

@@ -1,0 +1,144 @@
+"""HLO cost-model unit tests (the roofline's foundation) + optimizer and
+gradient-compression numerics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo import analyze, parse_module
+from repro.optim import adamw
+from repro.optim.compression import (decode_bf16, decode_int8, encode_bf16,
+                                     encode_int8, init_ef)
+
+
+# ------------------------------------------------------------ hlo analyzer
+def test_scan_trip_count_multiplied():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    txt = jax.jit(f).lower(s, s).compile().as_text()
+    a = analyze(txt)
+    expect = 2 * 128**3 * 8
+    assert abs(a["flops"] - expect) / expect < 0.01
+
+
+def test_nested_scan_trip_counts():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(s, s).compile().as_text()
+    a = analyze(txt)
+    expect = 2 * 64**3 * 12
+    assert abs(a["flops"] - expect) / expect < 0.02
+
+
+def test_dot_contracting_dims_flops():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+    sa = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    sb = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    txt = jax.jit(f).lower(sa, sb).compile().as_text()
+    a = analyze(txt)
+    expect = 2 * 4 * 32 * 8 * 16
+    assert abs(a["flops"] - expect) / max(expect, 1) < 0.05
+
+
+def test_collective_parse_and_wire_model():
+    # craft an HLO module by hand: 4-way all-reduce of 1MB + all-gather
+    txt = """HloModule test, entry_computation_layout={()->f32[]}
+
+ENTRY %main.1 (p0: f32[262144], p1: f32[1024]) -> f32[262144] {
+  %p0 = f32[262144]{0} parameter(0)
+  %p1 = f32[1024]{0} parameter(1)
+  %ar = f32[262144]{0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096]{0} all-gather(%p1), replica_groups=[4,4]<=[16], dimensions={0}
+  ROOT %out = f32[262144]{0} add(%ar, %ar)
+}
+"""
+    a = analyze(txt)
+    c = a["collectives"]
+    mb = 262144 * 4
+    assert c["all-reduce"]["count"] == 1
+    np.testing.assert_allclose(c["all-reduce"]["wire_bytes"],
+                               2 * mb * 3 / 4, rtol=1e-6)
+    assert c["all-gather"]["count"] == 1
+    np.testing.assert_allclose(c["all-gather"]["wire_bytes"],
+                               1024 * 4 * 3, rtol=1e-6)  # s*(n-1), n=4
+
+
+def test_fused_bytes_below_raw():
+    def f(x, w):
+        y = jnp.tanh(x) * 2 + 1
+        z = y @ w
+        return jax.nn.relu(z) - 0.5
+    s = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = jax.jit(f).lower(s, s).compile().as_text()
+    a = analyze(txt)
+    assert a["hbm_bytes"] <= a["hbm_bytes_raw"]
+    assert a["hbm_bytes"] > 0
+
+
+# ------------------------------------------------------------ optimizer
+def test_adamw_converges_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(32,)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((32,))}
+    c = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=10, total_steps=300,
+                          weight_decay=0.0)
+    st = adamw.init(params, c)
+    for _ in range(300):
+        g = {"w": params["w"] - target}
+        params, st, m = adamw.apply(params, g, st, c)
+    assert float(jnp.abs(params["w"] - target).max()) < 0.05
+
+
+def test_adamw_bf16_state_close_to_f32():
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32)}
+    out = {}
+    for dt in ("float32", "bfloat16"):
+        c = adamw.AdamWConfig(lr_peak=1e-3, warmup_steps=0, state_dtype=dt)
+        p, st = dict(params), adamw.init(params, c)
+        for _ in range(20):
+            p, st, _ = adamw.apply(p, g, st, c)
+        out[dt] = np.asarray(p["w"])
+    np.testing.assert_allclose(out["bfloat16"], out["float32"],
+                               rtol=0.02, atol=1e-4)
+
+
+def test_grad_clip():
+    g = {"w": jnp.full((100,), 10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(adamw.global_norm(clipped)), 1.0,
+                               rtol=1e-5)
+    assert float(norm) == pytest.approx(100.0)
+
+
+# ------------------------------------------------------------ compression
+@pytest.mark.parametrize("enc,dec", [(encode_bf16, decode_bf16),
+                                     (encode_int8, decode_int8)])
+def test_compression_error_feedback_converges(enc, dec):
+    """With error feedback, the time-average of decoded grads approaches the
+    true gradient (unbiasedness over steps)."""
+    rng = np.random.default_rng(2)
+    g_true = {"w": jnp.asarray(rng.normal(size=(256,)), jnp.float32)}
+    ef = init_ef(g_true)
+    acc = jnp.zeros((256,))
+    n = 50
+    for _ in range(n):
+        q, ef = enc(g_true, ef)
+        acc = acc + dec(q)["w"]
+    mean_err = float(jnp.abs(acc / n - g_true["w"]).max())
+    assert mean_err < 0.02

@@ -1,0 +1,131 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes, plus tie-breaking and padding edge cases."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.pdist.kernel import min_argmin_pallas
+from repro.kernels.pdist.ref import min_argmin_ref
+from repro.kernels.pdist.ops import min_argmin
+from repro.kernels.lloyd.kernel import lloyd_step_pallas
+from repro.kernels.lloyd.ref import lloyd_step_ref
+
+SHAPES = [(64, 3, 5), (513, 128, 34), (1000, 37, 18), (1025, 200, 130)]
+METRICS = ["l2sq", "l2", "l1"]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pdist_matches_ref(shape, metric, dtype):
+    n, m, d = shape
+    rng = np.random.default_rng(n + m + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    dk, ak = min_argmin_pallas(x, c, metric=metric, interpret=True)
+    dr, ar = min_argmin_ref(x.astype(jnp.float32), c.astype(jnp.float32), metric)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=tol, atol=tol)
+    if dtype == jnp.float32:
+        assert (np.asarray(ak) == np.asarray(ar)).all()
+    else:
+        # bf16: near-ties may flip the argmin; the chosen center must still be
+        # (near-)optimal
+        chosen = np.asarray(c.astype(jnp.float32))[np.asarray(ak)]
+        xf = np.asarray(x.astype(jnp.float32))
+        d_chosen = ((xf - chosen) ** 2).sum(-1)
+        if metric == "l2":
+            d_chosen = np.sqrt(d_chosen)
+        if metric == "l1":
+            d_chosen = np.abs(xf - chosen).sum(-1)
+        np.testing.assert_allclose(d_chosen, np.asarray(dr), rtol=5e-2, atol=5e-2)
+
+
+def test_pdist_tie_breaks_to_first_index():
+    # duplicate centers: argmin must pick the smallest index, like the oracle
+    x = jnp.zeros((8, 4), jnp.float32)
+    c = jnp.concatenate([jnp.ones((3, 4)), jnp.ones((130, 4))])  # all identical
+    _, ak = min_argmin_pallas(x, c, metric="l2sq", interpret=True)
+    assert (np.asarray(ak) == 0).all()
+
+
+def test_pdist_ops_chunked_equals_full():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1000, 9)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(33, 9)), jnp.float32)
+    for metric in METRICS:
+        d1, a1 = min_argmin(x, c, metric=metric, block_n=128)
+        d2, a2 = min_argmin_ref(x, c, metric)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-5, atol=1e-6)
+        assert (np.asarray(a1) == np.asarray(a2)).all()
+
+
+@pytest.mark.parametrize("shape", [(64, 3, 5), (513, 100, 34), (1025, 130, 200)])
+@pytest.mark.parametrize("metric", ["l2sq", "l2"])
+def test_lloyd_matches_ref(shape, metric):
+    n, k, d = shape
+    rng = np.random.default_rng(n + k)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 3, size=(n,)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    sk, ck, ak, dk = lloyd_step_pallas(x, w, c, metric=metric, interpret=True)
+    sr, cr, ar, dr = lloyd_step_ref(x, w, c, metric)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(ak) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-5, atol=1e-5)
+
+
+def test_lloyd_weight_conservation():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(777, 12)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, size=(777,)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(13, 12)), jnp.float32)
+    _, counts, _, _ = lloyd_step_pallas(x, w, c, interpret=True)
+    np.testing.assert_allclose(float(counts.sum()), float(w.sum()), rtol=1e-5)
+
+
+# ------------------------------------------------------------ wkv6 kernel
+@pytest.mark.parametrize("shape", [(8, 64, 64, 16), (16, 32, 64, 16),
+                                   (8, 128, 64, 64)])
+def test_wkv_kernel_matches_oracle(shape):
+    from repro.kernels.wkv.kernel import wkv_forward_pallas
+    from repro.kernels.wkv.ref import wkv_ref
+    BH, T, K, c = shape
+    rng = np.random.default_rng(BH + T)
+    r, k, v = (jnp.asarray(rng.normal(size=(BH, T, K)), jnp.float32)
+               for _ in range(3))
+    lw = jnp.asarray(-np.exp(rng.uniform(-6, 3, size=(BH, T, K))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(K,)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(BH, K, K)), jnp.float32)
+    ok, sk = wkv_forward_pallas(r, k, v, lw, u, s0, chunk=c, interpret=True)
+    orf, srf = wkv_ref(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(ok), np.asarray(orf), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(srf), atol=1e-3)
+
+
+def test_wkv_custom_vjp_grads_match_jnp():
+    from repro.kernels.wkv.ops import wkv_forward
+    from repro.kernels.wkv.ref import wkv_ref
+    BH, T, K = 4, 32, 16
+    rng = np.random.default_rng(5)
+    r, k, v = (jnp.asarray(rng.normal(size=(BH, T, K)), jnp.float32)
+               for _ in range(3))
+    lw = jnp.asarray(-np.exp(rng.uniform(-4, 1, size=(BH, T, K))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(K,)), jnp.float32)
+    s0 = jnp.zeros((BH, K, K), jnp.float32)
+
+    def loss_kernel(r):
+        o, _ = wkv_forward(r, k, v, lw, u, s0, 16)
+        return (o ** 2).sum()
+
+    def loss_ref(r):
+        o, _ = wkv_ref(r, k, v, lw, u, s0)
+        return (o ** 2).sum()
+
+    g1 = jax.grad(loss_kernel)(r)
+    g2 = jax.grad(loss_ref)(r)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,84 @@
+"""Second-level clustering (k-means--) + baseline summaries."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (kmeans_minus_minus, kmeanspp_summary, pp_budget,
+                        kmeans_parallel_summary, rand_summary)
+from repro.data.synthetic import gauss
+
+
+def test_kmeans_mm_finds_planted_outliers():
+    x, out_ids = gauss(n_centers=5, per_center=400, t=25, sigma=0.05, seed=0)
+    n = x.shape[0]
+    sol = kmeans_minus_minus(jnp.asarray(x), jnp.ones((n,)), jnp.ones((n,), bool),
+                             jax.random.key(0), k=5, t=25.0)
+    found = set(np.nonzero(np.asarray(sol.outlier))[0].tolist())
+    rec = len(found & set(out_ids.tolist())) / len(out_ids)
+    assert rec >= 0.8
+
+
+def test_kmeans_mm_outlier_budget_respected():
+    x, _ = gauss(n_centers=4, per_center=200, t=20, sigma=0.1, seed=1)
+    n = x.shape[0]
+    w = jnp.ones((n,))
+    sol = kmeans_minus_minus(jnp.asarray(x), w, jnp.ones((n,), bool),
+                             jax.random.key(0), k=4, t=20.0)
+    assert float((w * sol.outlier).sum()) <= 20.0
+
+
+def test_weighted_equals_duplicated():
+    """A point with weight w must act like w coincident unit points."""
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(50, 3)).astype(np.float32)
+    w = rng.integers(1, 4, size=50).astype(np.float32)
+    dup = np.repeat(pts, w.astype(int), axis=0)
+    key = jax.random.key(7)
+    s1 = kmeans_minus_minus(jnp.asarray(pts), jnp.asarray(w),
+                            jnp.ones((50,), bool), key, k=3, t=5.0, iters=30)
+    s2 = kmeans_minus_minus(jnp.asarray(dup), jnp.ones((dup.shape[0],)),
+                            jnp.ones((dup.shape[0],), bool), key, k=3, t=5.0,
+                            iters=30)
+    assert abs(float(s1.cost) - float(s2.cost)) / max(float(s2.cost), 1e-6) < 0.35
+
+
+def test_pp_summary_weights_conserve():
+    x = np.random.default_rng(0).normal(size=(1000, 4)).astype(np.float32)
+    b = pp_budget(1000, 5, 20)
+    s = kmeanspp_summary(jnp.asarray(x), jax.random.key(0), budget=b)
+    np.testing.assert_allclose(float(s.weights.sum()), 1000, rtol=1e-6)
+    assert int(s.valid.sum()) == b
+
+
+def test_rand_summary_weights_conserve():
+    x = np.random.default_rng(0).normal(size=(800, 4)).astype(np.float32)
+    s = rand_summary(jnp.asarray(x), jax.random.key(0), budget=100)
+    np.testing.assert_allclose(float(s.weights.sum()), 800, rtol=1e-6)
+    assert len(np.unique(np.asarray(s.indices))) == 100  # no replacement
+
+
+def test_kmeans_parallel_comm_grows_with_sites():
+    x = np.random.default_rng(0).normal(size=(2000, 4)).astype(np.float32)
+    r5 = kmeans_parallel_summary(jnp.asarray(x), jax.random.key(0),
+                                 budget=100, sites=5)
+    r20 = kmeans_parallel_summary(jnp.asarray(x), jax.random.key(0),
+                                  budget=100, sites=20)
+    assert float(r20.comm_records) > 3.0 * float(r5.comm_records)
+    np.testing.assert_allclose(float(r5.summary.weights.sum()), 2000, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 8), t=st.integers(0, 30), seed=st.integers(0, 10**6))
+def test_kmeans_mm_property(k, t, seed):
+    rng = np.random.default_rng(seed)
+    n = 300
+    x = rng.normal(size=(n, 3)).astype(np.float32)
+    sol = kmeans_minus_minus(jnp.asarray(x), jnp.ones((n,)),
+                             jnp.ones((n,), bool), jax.random.key(seed % 97),
+                             k=k, t=float(t), iters=10)
+    assert sol.centers.shape == (k, 3)
+    assert float(jnp.sum(sol.outlier)) <= t
+    assert np.isfinite(float(sol.cost))
+    assert float(sol.cost) >= 0

@@ -1,0 +1,250 @@
+"""Per-arch smoke tests (reduced configs, CPU) + model-level correctness:
+decode-vs-train consistency, WKV chunk oracle, RG-LRU scan-vs-step, MoE
+dispatch semantics."""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_train_step
+from repro.models.layers import ShardCtx
+from repro.models.rglru import rglru_block, rglru_layer_init
+from repro.models.rwkv6 import wkv_chunked, wkv_recurrent
+from repro.models.transformer import (forward_decode, forward_prefill,
+                                      forward_train, init_cache, init_params)
+from repro.optim import adamw
+
+CTX = ShardCtx(mesh=None)
+KEY = jax.random.key(0)
+
+
+def _batch(cfg, B, S, key=KEY):
+    nt = S - (cfg.frontend_tokens if cfg.family != "encdec"
+              and cfg.frontend != "none" else 0)
+    b = {"tokens": jax.random.randint(key, (B, nt), 0, cfg.vocab)}
+    if cfg.frontend == "vlm_patches":
+        b["patches"] = jax.random.normal(key, (B, cfg.frontend_tokens,
+                                               cfg.frontend_dim), jnp.float32)
+    if cfg.frontend == "audio_frames":
+        b["frames"] = jax.random.normal(key, (B, max(S // 4, 8),
+                                              cfg.frontend_dim), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Assigned-arch smoke: REDUCED same-family config, one full train step
+    (fwd+bwd+AdamW) on CPU; asserts shapes and no NaNs."""
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, KEY)
+    step, optc = make_train_step(cfg, mesh=None)
+    opt = adamw.init(params, optc)
+    batch = _batch(cfg, 2, 64)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed and shapes preserved
+    changed = jax.tree.map(lambda a, b: (a.shape == b.shape,
+                                         bool((a != b).any())),
+                           params, new_params)
+    flags = jax.tree.leaves(changed, is_leaf=lambda x: isinstance(x, tuple))
+    assert all(sh for sh, _ in flags)
+    assert any(ch for _, ch in flags)
+    assert int(new_opt.step) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "h2o-danube-1.8b", "rwkv6-7b",
+                                  "recurrentgemma-9b", "qwen3-moe-235b-a22b",
+                                  "seamless-m4t-medium"])
+def test_decode_matches_teacher_forcing(arch):
+    """prefill(prompt) + decode(next) must equal the full forward on
+    [prompt; next] — validates every cache layout."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.family == "moe":
+        # dropped-token MoE is dispatch-group-dependent; ample capacity makes
+        # decode == teacher forcing exactly (no drops on either path)
+        cfg = cfg.replace(capacity_factor=16.0)
+    params = init_params(cfg, KEY)
+    B, S = 2, 16
+    key = jax.random.key(42)
+    toks = jax.random.randint(key, (B, S + 1), 2, cfg.vocab)
+
+    batch = _batch(cfg, B, S)
+    batch["tokens"] = toks[:, :S]
+    lg_prefill, cache = forward_prefill(params, batch, cfg, CTX, max_len=S + 8)
+    lg_step, _ = forward_decode(params, cache, toks[:, S:S + 1], cfg, CTX)
+
+    batch2 = dict(batch, tokens=toks)
+    if cfg.family == "encdec":
+        full_logits = _full_logits_encdec(params, batch2, cfg)
+    else:
+        full_logits = _full_logits(params, batch2, cfg)
+    # prefill's last-token logits == teacher-forced logits at position S-1
+    np.testing.assert_allclose(np.asarray(lg_prefill),
+                               np.asarray(full_logits[:, -2, :]),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(lg_step),
+                               np.asarray(full_logits[:, -1, :]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def _full_logits(params, batch, cfg):
+    from repro.models.layers import rmsnorm, unembed
+    from repro.models.transformer import _embed_inputs
+    # teacher-forcing logits via the training forward path internals
+    import repro.models.transformer as T
+    x, _ = T._embed_inputs(params, batch, cfg, CTX)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    if cfg.family == "dense":
+        def body(c, lp):
+            y, _ = T._dense_layer_train(lp, c, cfg, CTX, positions)
+            return y, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "moe":
+        def body(c, gp):
+            for j in range(cfg.moe_every - 1):
+                lp = jax.tree.map(lambda a: a[j], gp["dense"])
+                c, _ = T._dense_layer_train(lp, c, cfg, CTX, positions)
+            c, _ = T._dense_layer_train(gp["moe"], c, cfg, CTX, positions)
+            return c, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "rwkv6":
+        from repro.models.rwkv6 import rwkv_block
+        def body(c, lp):
+            y, _ = rwkv_block(lp, c, cfg, CTX)
+            return y, None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    elif cfg.family == "rglru_hybrid":
+        def rec_body(c, lp):
+            y, _ = rglru_block(lp["rec"], c, cfg, CTX)
+            y, _ = T._ffn(lp, y, cfg, CTX)
+            return y, None
+        def group_body(c, gp):
+            c, _ = jax.lax.scan(rec_body, c, gp["recs"])
+            c, _ = T._dense_layer_train(gp["attn"], c, cfg, CTX, positions,
+                                        window=cfg.local_window)
+            return c, None
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+        if "tail" in params:
+            x, _ = jax.lax.scan(rec_body, x, params["tail"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["lm_head"], x, CTX)
+
+
+def _full_logits_encdec(params, batch, cfg):
+    """Teacher-forcing decoder logits for the enc-dec family."""
+    import repro.models.transformer as T
+    from repro.models.layers import kv_proj, rmsnorm, unembed, attention
+    frames, tokens = batch["frames"], batch["tokens"]
+    x_enc = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend"]["proj"]
+    pos_e = jnp.arange(x_enc.shape[1], dtype=jnp.int32)
+
+    def enc_body(c, lp):
+        y, _ = T._dense_layer_train(lp, c, cfg, CTX, pos_e, causal=False)
+        return y, None
+    x_enc, _ = jax.lax.scan(enc_body, x_enc, params["enc_layers"])
+    x_enc = rmsnorm(params["final_norm"], x_enc, cfg.norm_eps)
+
+    x = T.embed(params["embed"], tokens)
+    pos_d = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    def dec_body(c, lp):
+        ck, cv = kv_proj(lp["xattn"], x_enc, cfg, pos_e, use_rope=False)
+        y, _ = T._dense_layer_train(lp, c, cfg, CTX, pos_d,
+                                    enc_kv=(ck, cv, pos_e, None))
+        return y, None
+    x, _ = jax.lax.scan(dec_body, x, params["dec_layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["lm_head"], x, CTX)
+
+
+def test_wkv_chunked_matches_recurrent_extreme_decays():
+    rng = np.random.default_rng(0)
+    B, T, H, K = 2, 64, 2, 8
+    args = [jnp.asarray(rng.normal(size=(B, T, H, K)), jnp.float32)
+            for _ in range(3)]
+    lw = jnp.asarray(-np.exp(rng.uniform(-8, 4, size=(B, T, H, K))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(B, H, K, K)), jnp.float32)
+    oc, sc = wkv_chunked(*args, lw, u, s0, 16)
+    orr, sr = wkv_recurrent(*args, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(orr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sr), atol=1e-4)
+
+
+def test_rglru_scan_matches_stepwise():
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    p = rglru_layer_init(jax.random.key(3), cfg, jnp.float32)
+    B, T = 2, 12
+    x = jax.random.normal(jax.random.key(4), (B, T, cfg.d_model), jnp.float32)
+    y_scan, st_scan = rglru_block(p, x, cfg, CTX)
+    # step one token at a time
+    st = None
+    ys = []
+    for t in range(T):
+        y, st = rglru_block(p, x[:, t:t + 1], cfg, CTX, state=st)
+        ys.append(y)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_step),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_scan["h"]), np.asarray(st["h"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_routes_and_conserves():
+    from repro.models.moe import moe_ffn, moe_init
+    cfg = get_config("qwen3-moe-235b-a22b", smoke=True)
+    p = moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model), jnp.float32)
+    y, aux = moe_ffn(p, x, cfg, CTX)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["aux_loss"]) >= 0.99  # >= 1 at balance, finite
+    assert 0.0 <= float(aux["drop_frac"]) < 0.8
+
+
+def test_moe_capacity_drops_when_unbalanced():
+    from repro.models.moe import moe_ffn, moe_init
+    cfg = get_config("qwen3-moe-235b-a22b", smoke=True).replace(
+        capacity_factor=0.25)
+    p = moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model), jnp.float32)
+    _, aux = moe_ffn(p, x, cfg, CTX)
+    assert float(aux["drop_frac"]) > 0.0
+
+
+def test_sliding_window_limits_attention():
+    """With SWA, logits at position t must not depend on tokens more than
+    n_layers * window behind (the stacked receptive field)."""
+    cfg = get_config("h2o-danube-1.8b", smoke=True).replace(sliding_window=8)
+    params = init_params(cfg, KEY)  # 2 layers x window 8 -> receptive 16
+    B, S = 1, 40
+    t1 = jax.random.randint(jax.random.key(1), (B, S), 2, cfg.vocab)
+    t2 = t1.at[:, 0:6].set(jax.random.randint(jax.random.key(2), (B, 6), 2, cfg.vocab))
+    l1 = _full_logits(params, {"tokens": t1}, cfg)
+    l2 = _full_logits(params, {"tokens": t2}, cfg)
+    # last changed token 5; receptive field 2*8-1 -> identical from 5+16=21 on
+    np.testing.assert_allclose(np.asarray(l1[:, 21:]), np.asarray(l2[:, 21:]),
+                               rtol=1e-4, atol=1e-4)
+    # near the start they differ
+    assert np.abs(np.asarray(l1[:, 2]) - np.asarray(l2[:, 2])).max() > 1e-3
+
+
+def test_rwkv_pallas_wkv_path_matches_jnp():
+    """cfg.wkv_use_pallas routes through the Pallas chunk kernel with a
+    custom VJP; forward and grads must match the jnp chunked path."""
+    cfg = get_config("rwkv6-7b", smoke=True)
+    from repro.models.rwkv6 import rwkv_block, rwkv_layer_init
+    p = rwkv_layer_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model), jnp.float32)
+    cfgp = cfg.replace(wkv_use_pallas=True)
+    y1, _ = rwkv_block(p, x, cfg, CTX)
+    y2, _ = rwkv_block(p, x, cfgp, CTX)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-3)
+    g1 = jax.grad(lambda xx: rwkv_block(p, xx, cfg, CTX)[0].sum())(x)
+    g2 = jax.grad(lambda xx: rwkv_block(p, xx, cfgp, CTX)[0].sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=5e-3)

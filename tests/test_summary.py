@@ -1,0 +1,157 @@
+"""Algorithm 1/2 invariants + hypothesis property tests."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (augmented_summary_outliers, information_loss,
+                        kmeans_minus_minus, summary_outliers,
+                        summary_outliers_compact)
+from repro.data.synthetic import gauss
+
+
+def _mk_data(n, d, seed, outliers=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    if outliers:
+        ids = rng.choice(n, outliers, replace=False)
+        x[ids] += rng.uniform(-20, 20, size=(outliers, d))
+    return x
+
+
+def _check_invariants(x, summ, k, t):
+    n = x.shape[0]
+    # weight conservation: every point maps somewhere
+    np.testing.assert_allclose(float(summ.weights.sum()), n, rtol=1e-6)
+    # summary size bound O(kappa log n + t)
+    kappa = max(k, math.ceil(math.log(max(n, 2))))
+    assert int(summ.valid.sum()) <= 2 * kappa * max(1, math.ceil(
+        math.log(max(n, 2)) / -math.log1p(-0.45))) + 8 * t + 1
+    # outlier candidates <= 8t
+    assert int((summ.valid & summ.is_candidate).sum()) <= 8 * t
+    # sigma is a valid mapping into the summary points
+    sig = np.asarray(summ.sigma)
+    sel = set(np.asarray(summ.indices)[np.asarray(summ.valid)].tolist())
+    assert set(np.unique(sig).tolist()) <= sel
+    # every valid summary point carries positive weight or is a center
+    w = np.asarray(summ.weights)[np.asarray(summ.valid)]
+    assert (w >= 0).all()
+
+
+@pytest.mark.parametrize("impl", [summary_outliers, summary_outliers_compact])
+@pytest.mark.parametrize("metric", ["l2sq", "l2", "l1"])
+def test_summary_invariants(impl, metric):
+    x = _mk_data(2000, 5, 0, outliers=50)
+    summ = impl(jnp.asarray(x) if impl is summary_outliers else x,
+                jax.random.key(1), k=10, t=50, metric=metric)
+    _check_invariants(x, summ, 10, 50)
+
+
+def test_augmentation_never_increases_loss():
+    x, _ = gauss(n_centers=10, per_center=300, t=60, sigma=0.1, seed=3)
+    xj = jnp.asarray(x)
+    key = jax.random.key(5)
+    base = summary_outliers(xj, key, k=10, t=60)
+    aug = augmented_summary_outliers(xj, key, k=10, t=60)
+    lb = float(information_loss(xj, base.sigma))
+    la = float(information_loss(xj, aug.sigma))
+    assert la <= lb * 1.01
+    _check_invariants(x, aug, 10, 60)
+
+
+def test_loss_bounded_by_opt_proxy():
+    """Theorem 1: loss(Q) = O(OPT). Proxy OPT with k-means-- on the raw data
+    (an upper bound on OPT!), so loss(Q) <= C * proxy must hold for the
+    theorem's C; we check a generous constant."""
+    x, out_ids = gauss(n_centers=10, per_center=200, t=40, sigma=0.05, seed=7)
+    xj = jnp.asarray(x)
+    summ = summary_outliers(xj, jax.random.key(0), k=10, t=40)
+    loss = float(information_loss(xj, summ.sigma))
+    n = x.shape[0]
+    sol = kmeans_minus_minus(xj, jnp.ones((n,)), jnp.ones((n,), bool),
+                             jax.random.key(1), k=10, t=40.0)
+    assert loss <= 20.0 * float(sol.cost) + 1e-3
+
+
+def test_outliers_survive_into_candidates():
+    """Planted far outliers must end up as summary candidates (preRec)."""
+    x, out_ids = gauss(n_centers=10, per_center=300, t=30, sigma=0.05, seed=11)
+    summ = augmented_summary_outliers(jnp.asarray(x), jax.random.key(2),
+                                      k=10, t=30)
+    sel = np.asarray(summ.indices)[np.asarray(summ.valid)]
+    pre_rec = len(set(sel.tolist()) & set(out_ids.tolist())) / len(out_ids)
+    assert pre_rec >= 0.9
+
+
+def test_t_zero_summarizes_everything_into_centers():
+    x = _mk_data(500, 3, 1)
+    summ = summary_outliers(jnp.asarray(x), jax.random.key(0), k=5, t=0)
+    assert int(summ.n_remaining) <= 1
+    np.testing.assert_allclose(float(summ.weights.sum()), 500, rtol=1e-6)
+
+
+def test_tiny_dataset_no_rounds():
+    x = _mk_data(20, 3, 2)
+    summ = summary_outliers(jnp.asarray(x), jax.random.key(0), k=5, t=10)
+    # n <= 8t: zero rounds, everything is a candidate
+    assert int(summ.n_rounds) == 0
+    assert int(summ.valid.sum()) == 20
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(50, 800),
+    d=st.integers(1, 8),
+    k=st.integers(1, 12),
+    t=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_summary_property(n, d, k, t, seed):
+    """Property: invariants hold for arbitrary data/params."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=rng.uniform(0.1, 10), size=(n, d)).astype(np.float32)
+    summ = summary_outliers(jnp.asarray(x), jax.random.key(seed % 1000),
+                            k=k, t=t)
+    np.testing.assert_allclose(float(summ.weights.sum()), n, rtol=1e-5)
+    assert int((summ.valid & summ.is_candidate).sum()) <= max(8 * t, n)
+    sig = np.asarray(summ.sigma)
+    assert ((0 <= sig) & (sig < n)).all()
+    # idempotent mapping onto summary members
+    sel = np.zeros(n, bool)
+    sel[np.asarray(summ.indices)[np.asarray(summ.valid)]] = True
+    assert sel[sig].all()
+
+
+def test_augmented_compact_matches_jit_invariants():
+    from repro.core.augmented import augmented_summary_compact
+    x, out_ids = gauss(n_centers=8, per_center=250, t=40, sigma=0.1, seed=13)
+    summ = augmented_summary_compact(x, jax.random.key(3), k=8, t=40)
+    _check_invariants(x, summ, 8, 40)
+    # the paper's balance goal: #centers ~ #candidates after augmentation
+    n_cand = int((summ.valid & summ.is_candidate).sum())
+    n_cent = int((summ.valid & ~summ.is_candidate).sum())
+    assert n_cent >= n_cand * 0.8
+    # planted outliers still surface
+    sel = np.asarray(summ.indices)[np.asarray(summ.valid)]
+    pre = len(set(sel.tolist()) & set(out_ids.tolist())) / len(out_ids)
+    assert pre >= 0.9
+
+
+def test_shapes_cell_policy():
+    from repro.launch.shapes import SHAPES, cell_supported, input_structs
+    from repro.configs import get_config
+    full_attn = get_config("qwen2.5-32b")
+    subq = get_config("rwkv6-7b")
+    ok, why = cell_supported(full_attn, SHAPES["long_500k"])
+    assert not ok and "O(S^2)" in why
+    assert cell_supported(subq, SHAPES["long_500k"])[0]
+    # vlm structs carve the text region out of seq_len
+    vlm = get_config("llava-next-mistral-7b")
+    st = input_structs(vlm, SHAPES["train_4k"])
+    assert st["tokens"].shape[1] + vlm.frontend_tokens == 4096
+    enc = get_config("seamless-m4t-medium")
+    st = input_structs(enc, SHAPES["train_4k"])
+    assert st["frames"].shape[1] == 1024  # seq // 4
