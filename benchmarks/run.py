@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=None,
                     help="dataset scale override (default: per-bench scaled)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,table4,fig1,roofline")
+                    help="comma list: table2,table3,table4,fig1,roofline,stream")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -54,6 +54,19 @@ def main() -> None:
         for algo, ts in b.items():
             csv.append(f"fig1b/{algo},{ts[-1] * 1e6:.0f},time_s=" +
                        "|".join(f"{v:.2f}" for v in ts))
+
+    if want("stream"):
+        from benchmarks.stream_bench import run as sb
+        res = sb(scale=args.scale or 1.0)
+        csv.append(f"stream/ingest,{1e6 / res['ingest_pts_per_s']:.2f},"
+                   f"pts_per_s={res['ingest_pts_per_s']:.0f}")
+        csv.append(f"stream/query,{res['query_p50_ms'] * 1e3:.0f},"
+                   f"p50_ms={res['query_p50_ms']:.3f};"
+                   f"p99_ms={res['query_p99_ms']:.3f};"
+                   f"cost_ratio={res['cost_ratio']:.3f}")
+        csv.append(f"stream/refresh,{res['refresh_s'] * 1e6:.0f},"
+                   f"oneshot_s={res['oneshot_s']:.2f};"
+                   f"records={res['summary_records']}")
 
     if want("roofline"):
         from benchmarks.roofline import load, print_table

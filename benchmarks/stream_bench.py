@@ -1,0 +1,143 @@
+"""Streaming service benchmark: ingest throughput, query latency, quality.
+
+Feeds the synthetic Gaussian workload (Section 5.1.1 generator) through
+``repro.stream.StreamService`` in micro-batches and reports:
+
+  * ingest points/sec (steady-state, amortizing cadence refreshes),
+  * query p50/p99 latency through the micro-batched scoring path,
+  * streaming model cost vs one-shot k-means-- on the materialized
+    dataset (the quality price of never holding the data) — the
+    acceptance bar is a ratio <= 1.5x,
+  * wall time of a model refresh vs one-shot re-clustering.
+
+Emits ``BENCH_stream.json`` at the repo root so runs are comparable
+across PRs, and CSV lines via ``benchmarks/run.py --only stream``.
+
+    PYTHONPATH=src:. python benchmarks/stream_bench.py [--scale 1.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans_mm import kmeans_minus_minus
+from repro.data.synthetic import gauss
+from repro.kernels.pdist.ops import min_argmin
+from repro.stream import ServiceConfig, StreamService
+
+_DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
+
+
+def model_cost(x, centers, t, block_n=65536) -> float:
+    """(k,t)-means objective of ``centers`` on X: assign all, forgive the
+    t farthest points (the outlier budget), sum the rest."""
+    dist, _ = min_argmin(jnp.asarray(x), jnp.asarray(centers),
+                         metric="l2sq", block_n=block_n)
+    dist = np.sort(np.asarray(dist))
+    return float(dist[: max(dist.size - t, 1)].sum())
+
+
+def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
+        out_path: Path | str | None = _DEFAULT_OUT) -> dict:
+    k, d = 20, 5
+    per_center = max(int(2500 * scale), 200)
+    t = max(int(500 * scale), 40)
+    x, _ = gauss(n_centers=k, per_center=per_center, d=d, sigma=0.1,
+                 t=t, seed=seed)
+    n = x.shape[0]
+    batch = 4096
+    cfg = ServiceConfig(dim=d, k=k, t=t, leaf_size=4096,
+                        refresh_every=max(n // 4, batch), micro_batch=256,
+                        use_pallas=use_pallas, seed=seed)
+
+    # --- warm the jit caches on a throwaway service: one full cadence
+    # interval (same seed => same record counts => the same root bucket the
+    # measured refreshes compile for) plus one scoring micro-batch ---
+    warm = StreamService(cfg)
+    warm.ingest(x[:cfg.refresh_every])
+    warm.score(x[:cfg.micro_batch])
+
+    # --- ingest path (includes cadence refreshes: serving throughput) ---
+    svc = StreamService(cfg)
+    t0 = time.perf_counter()
+    for i in range(0, n, batch):
+        svc.ingest(x[i:i + batch])
+    t_ingest = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.refresh()
+    t_refresh = time.perf_counter() - t0
+
+    # --- query path: waves of micro-batches through submit/drain ---
+    rng = np.random.default_rng(seed + 1)
+    svc.score(x[:cfg.micro_batch])       # compile for this model, then reset
+    svc._latencies.clear()
+    n_waves, wave = 16, cfg.micro_batch
+    t0 = time.perf_counter()
+    for _ in range(n_waves):
+        q = x[rng.integers(0, n, size=wave)]
+        svc.submit(q)
+        svc.drain()
+    t_query = time.perf_counter() - t0
+    lat = svc.latency_stats()
+
+    # --- one-shot comparison on the fully materialized dataset ---
+    t0 = time.perf_counter()
+    sol = kmeans_minus_minus(
+        jnp.asarray(x), jnp.ones((n,)), jnp.ones((n,), bool),
+        jax.random.key(seed + 2), k=k, t=float(t), iters=cfg.second_iters,
+        block_n=65536)
+    jax.block_until_ready(sol.centers)
+    t_oneshot = time.perf_counter() - t0
+
+    stream_cost = model_cost(x, np.asarray(svc.model.centers), t)
+    oneshot_cost = model_cost(x, np.asarray(sol.centers), t)
+    result = {
+        "n": n, "d": d, "k": k, "t": t, "scale": scale,
+        "ingest_pts_per_s": n / t_ingest,
+        "ingest_s": t_ingest,
+        "query_p50_ms": lat["p50_ms"],
+        "query_p99_ms": lat["p99_ms"],
+        "query_throughput_per_s": n_waves * wave / t_query,
+        "refresh_s": t_refresh,
+        "oneshot_s": t_oneshot,
+        "summary_records": int(svc.tree.num_records),
+        "stream_cost": stream_cost,
+        "oneshot_cost": oneshot_cost,
+        "cost_ratio": stream_cost / max(oneshot_cost, 1e-12),
+        "model_version": int(svc.model.version),
+    }
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--out", default=str(_DEFAULT_OUT))
+    args = ap.parse_args()
+    res = run(scale=args.scale, seed=args.seed, use_pallas=args.use_pallas,
+              out_path=args.out)
+    print(f"n={res['n']} (k={res['k']}, t={res['t']})")
+    print(f"ingest : {res['ingest_pts_per_s']:,.0f} pts/s "
+          f"({res['ingest_s']:.2f}s incl. cadence refreshes)")
+    print(f"query  : p50 {res['query_p50_ms']:.2f} ms   "
+          f"p99 {res['query_p99_ms']:.2f} ms   "
+          f"({res['query_throughput_per_s']:,.0f} q/s)")
+    print(f"refresh: {res['refresh_s']:.2f}s on {res['summary_records']} "
+          f"summary records vs one-shot {res['oneshot_s']:.2f}s on all points")
+    print(f"quality: stream {res['stream_cost']:.4g} vs one-shot "
+          f"{res['oneshot_cost']:.4g}  (ratio {res['cost_ratio']:.3f})")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Streaming clustering service: merge-and-reduce over Summary-Outliers.
+
+The repo's one-shot pipeline (Algorithms 1-3) clusters a fully materialized
+dataset.  This package turns it into a continuously serving system:
+
+    raw stream --> leaf buffer --> weighted summaries --> buffer tree
+                                                             |
+                 queries <-- jitted pdist scoring <-- weighted k-means--
+
+Why merge-and-reduce is correct here
+------------------------------------
+The paper's central object, the weighted summary Q of X, has two properties
+that make it a composable (mergeable) sketch:
+
+1. **Mass conservation.**  Each record (q, w_q) in Q carries the mass of
+   the input records mapped to it (w_q = |sigma^{-1}(q)| in the unit case),
+   so sum(weights(Q)) == |X| exactly — unions of summaries represent unions
+   of data with no double counting, and Algorithm 3 already *relies* on
+   this when it clusters the union of per-site summaries.
+
+2. **Telescoping information loss.**  ``weighted_summary_outliers`` treats
+   a record of weight w as w coincident points (sampling ∝ weight, ball
+   capture by weight mass), so re-summarizing Q1 u Q2 is Algorithm 1 run on
+   a perturbed version of X1 u X2 in which every point has been moved to
+   its level-below representative.  By the triangle inequality the loss of
+   the composed map is at most loss(level below) + loss(new level); L
+   levels of merging cost at most an O(L) (O(log n)) factor over the
+   one-shot loss — the standard merge-and-reduce argument (Guha et al.,
+   *Distributed Partial Clustering*), and each level keeps the full
+   outlier budget t so up to t true outliers survive as candidates all the
+   way to the root.
+
+The root of the tree is therefore exactly what the paper's coordinator
+sees in the distributed setting — a union of weighted summaries — and the
+same second-level weighted k-means-- yields the serving model.
+
+Modules: ``weighted`` (weighted Algorithm 1 + merge/reduce primitives),
+``tree`` (buffer tree, sliding-window eviction, checkpointable state),
+``service`` (micro-batched scoring front end + CheckpointManager glue).
+
+Follow-ons tracked in ROADMAP.md: async model refresh off the ingest
+thread, multi-host serving (shard the tree by site, all_gather roots).
+"""
+from repro.stream.weighted import (  # noqa: F401
+    WeightedSummary, merge_summaries, resummarize, weighted_summary_outliers,
+)
+from repro.stream.tree import StreamTree, TreeConfig, record_cap  # noqa: F401
+from repro.stream.service import (  # noqa: F401
+    ModelState, QueryResult, ServiceConfig, StreamService,
+)

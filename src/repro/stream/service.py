@@ -1,0 +1,271 @@
+"""Online scoring front end over the stream tree.
+
+Write path: ``ingest`` feeds raw points into the merge-and-reduce tree;
+every ``refresh_every`` ingested points (or on demand) the tree root —
+the union of all live weighted summaries — is re-clustered with weighted
+k-means-- (the paper's coordinator step) into a versioned ``ModelState``.
+
+Read path: ``submit`` enqueues assign/score requests; ``drain`` serves the
+queue in fixed-size micro-batches through one jitted scoring kernel
+(fused min-distance + argmin via ``repro.kernels.pdist``, Pallas-capable
+with ``use_pallas=True``).  Padding every micro-batch to the same static
+shape means exactly one compile per (batch, model) shape — the hot path
+never retraces.  Per-request latency (enqueue -> scored) is recorded for
+p50/p99 reporting.
+
+Outlier scoring: a request's score is d(x, nearest center) / threshold,
+where threshold is the largest inlier distance seen when the model was
+fit; score > 1 flags the point as an outlier under the current model.
+
+Restart story: ``save``/``restore`` round-trip the tree + model + service
+counters through ``CheckpointManager`` (fixed-shape pytree, crc-verified,
+atomic publish), so a restored service returns bit-identical scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.kmeans_mm import kmeans_minus_minus
+from repro.kernels.pdist.ops import min_argmin
+from repro.stream.tree import StreamTree, TreeConfig
+from repro.stream.weighted import _bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    dim: int
+    k: int
+    t: int
+    leaf_size: int = 2048
+    refresh_every: int = 8192        # raw points between model refreshes
+    micro_batch: int = 256           # static query-batch shape
+    second_iters: int = 25
+    metric: str = "l2sq"
+    block_n: int = 16384
+    use_pallas: bool = False
+    window: Optional[int] = None
+    seed: int = 0
+
+    def tree_config(self) -> TreeConfig:
+        return TreeConfig(
+            dim=self.dim, k=self.k, t=self.t, leaf_size=self.leaf_size,
+            metric=self.metric, block_n=self.block_n,
+            use_pallas=self.use_pallas, window=self.window, seed=self.seed)
+
+
+class ModelState(NamedTuple):
+    centers: jnp.ndarray     # (k, d) f32
+    threshold: jnp.ndarray   # () f32 — max inlier distance at fit time
+    cost: jnp.ndarray        # () f32 — weighted second-level objective
+    version: jnp.ndarray     # () i32 — 0 means "no model yet"
+    trained_weight: jnp.ndarray  # () f32 — mass the model was fit on
+
+
+class QueryResult(NamedTuple):
+    request_id: int
+    center: int              # nearest-center index
+    distance: float
+    outlier_score: float     # distance / threshold; > 1 -> outlier
+    is_outlier: bool
+    latency_s: float
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_n", "use_pallas"))
+def _score_batch(x, centers, threshold, *, metric, block_n, use_pallas):
+    dist, amin = min_argmin(x, centers, metric=metric, block_n=block_n,
+                            use_pallas=use_pallas)
+    score = dist / jnp.maximum(threshold, 1e-30)
+    return dist, amin, score
+
+
+class StreamService:
+    def __init__(self, cfg: ServiceConfig, key: jax.Array | None = None):
+        self.cfg = cfg
+        key = key if key is not None else jax.random.key(cfg.seed)
+        kt, self._model_key = jax.random.split(key)
+        self.tree = StreamTree(cfg.tree_config(), kt)
+        self.model: Optional[ModelState] = None
+        self._since_refresh = 0
+        self._queue: deque = deque()   # (id, row (d,), t_enqueue)
+        self._next_id = 0
+        self._latencies: list[float] = []
+
+    # ------------------------------------------------------------ write path
+    def ingest(self, points, weights=None) -> None:
+        x = np.asarray(points, np.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        w = None if weights is None else np.asarray(weights,
+                                                    np.float32).reshape(-1)
+        if w is not None and w.shape[0] != x.shape[0]:
+            raise ValueError(f"{w.shape[0]} weights for {x.shape[0]} points")
+        # chunk by the refresh cadence so one huge call still refreshes on
+        # schedule rather than once at the end
+        i, n = 0, x.shape[0]
+        while i < n:
+            take = min(self.cfg.refresh_every - self._since_refresh, n - i)
+            if take <= 0:   # e.g. restored with a smaller refresh_every
+                self.refresh()
+                continue
+            self.tree.ingest(x[i:i + take],
+                             None if w is None else w[i:i + take])
+            self._since_refresh += take
+            i += take
+            if self._since_refresh >= self.cfg.refresh_every:
+                self.refresh()
+
+    def refresh(self) -> ModelState:
+        """Fit weighted k-means-- on the tree root; bump the model version."""
+        cfg = self.cfg
+        pts, wts, _ = self.tree.root()
+        s = pts.shape[0]
+        if s == 0:
+            raise RuntimeError("refresh() before any point was ingested")
+        pad = _bucket(s) - s
+        pts_p = jnp.asarray(np.pad(pts, ((0, pad), (0, 0))))
+        wts_p = jnp.asarray(np.pad(wts, (0, pad)))
+        valid = jnp.arange(s + pad) < s
+        version = 1 if self.model is None else int(self.model.version) + 1
+        sol = kmeans_minus_minus(
+            pts_p, wts_p, valid, jax.random.fold_in(self._model_key, version),
+            k=cfg.k, t=float(cfg.t), iters=cfg.second_iters, metric=cfg.metric,
+            block_n=cfg.block_n, use_pallas=cfg.use_pallas)
+        inlier = valid & ~sol.outlier
+        threshold = jnp.where(inlier, sol.distances, -jnp.inf).max()
+        threshold = jnp.maximum(threshold, 1e-12).astype(jnp.float32)
+        self.model = ModelState(
+            centers=sol.centers, threshold=threshold,
+            cost=sol.cost.astype(jnp.float32),
+            version=jnp.int32(version),
+            trained_weight=jnp.float32(float(wts.sum())))
+        self._since_refresh = 0
+        return self.model
+
+    # ------------------------------------------------------------ read path
+    def submit(self, points) -> list[int]:
+        """Enqueue query rows; returns their request ids."""
+        x = np.asarray(points, np.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self.cfg.dim:
+            # reject here, where the caller can handle it — a bad row that
+            # reaches drain() would crash mid-batch after requests were
+            # already dequeued
+            raise ValueError(f"expected (n, {self.cfg.dim}) queries, "
+                             f"got {x.shape}")
+        now = time.perf_counter()
+        ids = []
+        for row in x:
+            ids.append(self._next_id)
+            self._queue.append((self._next_id, row, now))
+            self._next_id += 1
+        return ids
+
+    def drain(self, max_requests: Optional[int] = None) -> list[QueryResult]:
+        """Serve queued requests in micro-batches against the current model."""
+        if self.model is None:
+            raise RuntimeError("no model yet — call refresh() first")
+        cfg = self.cfg
+        out: list[QueryResult] = []
+        budget = len(self._queue) if max_requests is None else max_requests
+        while self._queue and budget > 0:
+            take = min(cfg.micro_batch, len(self._queue), budget)
+            batch = [self._queue.popleft() for _ in range(take)]
+            budget -= take
+            xb = np.zeros((cfg.micro_batch, cfg.dim), np.float32)
+            xb[:take] = np.stack([b[1] for b in batch])
+            dist, amin, score = _score_batch(
+                jnp.asarray(xb), self.model.centers, self.model.threshold,
+                metric=cfg.metric, block_n=cfg.block_n,
+                use_pallas=cfg.use_pallas)
+            jax.block_until_ready(dist)
+            done = time.perf_counter()
+            dist, amin, score = (np.asarray(a) for a in (dist, amin, score))
+            for i, (rid, _, t0) in enumerate(batch):
+                lat = done - t0
+                self._latencies.append(lat)
+                out.append(QueryResult(
+                    request_id=rid, center=int(amin[i]),
+                    distance=float(dist[i]), outlier_score=float(score[i]),
+                    is_outlier=bool(score[i] > 1.0), latency_s=lat))
+        return out
+
+    def score(self, points) -> list[QueryResult]:
+        """Synchronous convenience: submit + drain in one call."""
+        self.submit(points)
+        return self.drain()
+
+    def latency_stats(self) -> dict:
+        if not self._latencies:
+            return {"count": 0, "p50_ms": float("nan"), "p99_ms": float("nan")}
+        lat = np.asarray(self._latencies)
+        return {"count": int(lat.size),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+
+    # ------------------------------------------------------------ checkpoint
+    def _model_arrays(self) -> dict:
+        cfg = self.cfg
+        m = self.model
+        if m is None:
+            m = ModelState(jnp.zeros((cfg.k, cfg.dim), jnp.float32),
+                           jnp.float32(0), jnp.float32(0), jnp.int32(0),
+                           jnp.float32(0))
+        return {"centers": m.centers, "threshold": m.threshold,
+                "cost": m.cost, "version": m.version,
+                "trained_weight": m.trained_weight}
+
+    def _state(self) -> dict:
+        return {
+            "tree": self.tree.pack_state(),
+            "model": self._model_arrays(),
+            "counters": {
+                "since_refresh": np.int64(self._since_refresh),
+                "next_id": np.int64(self._next_id),
+                "model_key": np.asarray(jax.random.key_data(self._model_key)),
+            },
+        }
+
+    def _skeleton(self) -> dict:
+        cfg = self.cfg
+        return {
+            "tree": StreamTree.skeleton_state(cfg.tree_config()),
+            "model": {"centers": jnp.zeros((cfg.k, cfg.dim), jnp.float32),
+                      "threshold": jnp.float32(0), "cost": jnp.float32(0),
+                      "version": jnp.int32(0), "trained_weight": jnp.float32(0)},
+            "counters": {"since_refresh": np.int64(0), "next_id": np.int64(0),
+                         "model_key": np.zeros((2,), np.uint32)},
+        }
+
+    def save(self, manager: CheckpointManager, step: int, *,
+             blocking: bool = True) -> None:
+        manager.save(step, self._state(), blocking=blocking)
+
+    @classmethod
+    def restore(cls, cfg: ServiceConfig, manager: CheckpointManager,
+                step: int | None = None) -> "StreamService":
+        svc = cls(cfg)
+        state, _ = manager.restore(svc._skeleton(), step)
+        svc.tree = StreamTree.from_state(cfg.tree_config(), state["tree"])
+        svc._since_refresh = int(state["counters"]["since_refresh"])
+        svc._next_id = int(state["counters"]["next_id"])
+        svc._model_key = jax.random.wrap_key_data(
+            jnp.asarray(state["counters"]["model_key"], jnp.uint32))
+        md = state["model"]
+        if int(md["version"]) > 0:
+            svc.model = ModelState(
+                centers=jnp.asarray(md["centers"], jnp.float32),
+                threshold=jnp.asarray(md["threshold"], jnp.float32),
+                cost=jnp.asarray(md["cost"], jnp.float32),
+                version=jnp.asarray(md["version"], jnp.int32),
+                trained_weight=jnp.asarray(md["trained_weight"], jnp.float32))
+        return svc

@@ -1,0 +1,285 @@
+"""Merge-and-reduce buffer tree over weighted Summary-Outliers summaries.
+
+Ingest path: raw points accumulate in a leaf buffer; every ``leaf_size``
+points the buffer is reduced to a level-0 weighted summary (Algorithm 1 at
+full outlier budget t).  Whenever two summaries share a level, the older
+pair is merged (concatenate) and reduced (weighted Summary-Outliers on the
+union) into one level-(l+1) summary — the classic binary-counter coreset
+tree, so a stream of n points holds at most O(log(n / leaf_size)) live
+summaries of O(m + 8t) records each: O(m log n) memory total.
+
+Sliding window (optional): with ``window=W`` set, merges are capped so no
+summary spans more than max(leaf_size, W // 4) raw points, and summaries
+whose newest point has fallen out of the window are evicted whole.  The
+model then tracks the last ~W points with eviction granularity <= W/4.
+
+Checkpointing: the tree's state packs into a *fixed-shape* pytree of
+arrays (``pack_state``/``from_state``), so ``CheckpointManager`` can
+save/restore it across process restarts with its usual shape-checked
+manifest — no pickling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.stream.weighted import (WeightedSummary, max_rounds,
+                                   resummarize, weighted_summary_outliers)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    dim: int
+    k: int
+    t: int
+    leaf_size: int = 2048
+    alpha: float = 2.0
+    beta: float = 0.45
+    metric: str = "l2sq"
+    block_n: int = 65536
+    use_pallas: bool = False
+    window: Optional[int] = None     # raw points; None = full stream
+    max_summaries: int = 64          # checkpoint slots; force-merge beyond
+    max_points: int = 2 ** 34        # stream-length bound for the record cap
+    seed: int = 0
+
+
+def record_cap(cfg: TreeConfig) -> int:
+    """Static per-summary record capacity for checkpoint packing.
+
+    Centers are bounded by rounds * m where rounds depends only on the mass
+    (<= cfg.max_points) and candidates carry >= 1 mass each in tree use
+    (raw points enter with unit weight), so candidates <= 8t.
+    """
+    rounds = max_rounds(float(cfg.max_points), cfg.t, cfg.beta)
+    m = math.ceil(cfg.alpha * max(cfg.k, math.ceil(math.log(max(cfg.leaf_size, 2)))))
+    cap = rounds * m + 8 * cfg.t + 1
+    # one fixed-point pass: merges see up to 2*cap records, which can only
+    # grow kappa (and m) logarithmically.
+    m = math.ceil(cfg.alpha * max(cfg.k, math.ceil(math.log(max(2 * cap, 2)))))
+    return rounds * m + 8 * cfg.t + 1
+
+
+@dataclasses.dataclass
+class TreeNode:
+    summary: WeightedSummary
+    level: int
+    min_seq: int    # [min_seq, max_seq): raw-point sequence ids spanned
+    max_seq: int
+    count: int      # raw points spanned
+
+
+class StreamTree:
+    """Mergeable summary tree; all state numpy-side, distance loops jitted."""
+
+    def __init__(self, cfg: TreeConfig, key: jax.Array | None = None):
+        self.cfg = cfg
+        self.key = key if key is not None else jax.random.key(cfg.seed)
+        self.nodes: List[TreeNode] = []      # chronological order
+        self._buf = np.zeros((cfg.leaf_size, cfg.dim), np.float32)
+        self._buf_w = np.zeros((cfg.leaf_size,), np.float32)
+        self._buf_n = 0
+        self._flushed = 0                    # raw points reduced into leaves
+        self.total_ingested = 0
+        self._cap = record_cap(cfg)
+
+    # ------------------------------------------------------------ ingest
+    def ingest(self, points, weights=None) -> None:
+        x = np.asarray(points, np.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.shape[1] != self.cfg.dim:
+            raise ValueError(f"expected dim {self.cfg.dim}, got {x.shape[1]}")
+        w = (np.ones((x.shape[0],), np.float32) if weights is None
+             else np.asarray(weights, np.float32).reshape(-1))
+        if w.shape[0] != x.shape[0]:
+            raise ValueError(
+                f"{w.shape[0]} weights for {x.shape[0]} points — a silent "
+                f"truncation here would break mass conservation")
+        i = 0
+        while i < x.shape[0]:
+            take = min(self.cfg.leaf_size - self._buf_n, x.shape[0] - i)
+            self._buf[self._buf_n:self._buf_n + take] = x[i:i + take]
+            self._buf_w[self._buf_n:self._buf_n + take] = w[i:i + take]
+            self._buf_n += take
+            self.total_ingested += take
+            i += take
+            if self._buf_n == self.cfg.leaf_size:
+                self._flush_leaf()
+
+    def _next_key(self) -> jax.Array:
+        self.key, sk = jax.random.split(self.key)
+        return sk
+
+    def _flush_leaf(self) -> None:
+        cfg = self.cfg
+        summ = weighted_summary_outliers(
+            self._buf[:self._buf_n], self._buf_w[:self._buf_n],
+            self._next_key(), k=cfg.k, t=cfg.t, alpha=cfg.alpha,
+            beta=cfg.beta, metric=cfg.metric, block_n=cfg.block_n,
+            use_pallas=cfg.use_pallas)
+        self._check_cap(summ)
+        self.nodes.append(TreeNode(
+            summary=summ, level=0, min_seq=self._flushed,
+            max_seq=self._flushed + self._buf_n, count=self._buf_n))
+        self._flushed += self._buf_n
+        self._buf_n = 0
+        self._evict()
+        self._compact()
+
+    def _check_cap(self, summ: WeightedSummary) -> None:
+        if summ.points.shape[0] > self._cap:
+            raise RuntimeError(
+                f"summary has {summ.points.shape[0]} records > static cap "
+                f"{self._cap}; raise TreeConfig.max_points or check weights "
+                f"(sub-unit weights break the 8t candidate-count bound)")
+
+    # ------------------------------------------------------------ merge
+    def _evict(self) -> None:
+        if self.cfg.window is None:
+            return
+        cutoff = self.total_ingested - self.cfg.window
+        self.nodes = [nd for nd in self.nodes if nd.max_seq > cutoff]
+
+    def _merge_pair(self, i: int, j: int) -> None:
+        a, b = self.nodes[i], self.nodes[j]
+        cfg = self.cfg
+        summ = resummarize(
+            [a.summary, b.summary], self._next_key(), k=cfg.k, t=cfg.t,
+            alpha=cfg.alpha, beta=cfg.beta, metric=cfg.metric,
+            block_n=cfg.block_n, use_pallas=cfg.use_pallas)
+        self._check_cap(summ)
+        self.nodes[i] = TreeNode(
+            summary=summ, level=max(a.level, b.level) + 1,
+            min_seq=min(a.min_seq, b.min_seq),
+            max_seq=max(a.max_seq, b.max_seq),
+            count=a.count + b.count)
+        del self.nodes[j]
+
+    def _max_span(self) -> Optional[int]:
+        if self.cfg.window is None:
+            return None
+        return max(self.cfg.leaf_size, self.cfg.window // 4)
+
+    def _compact(self) -> None:
+        span = self._max_span()
+        while True:
+            by_level: dict[int, list[int]] = {}
+            for i, nd in enumerate(self.nodes):
+                by_level.setdefault(nd.level, []).append(i)
+            pair = None
+            for lvl in sorted(by_level):
+                ids = by_level[lvl]
+                if len(ids) < 2:
+                    continue
+                i, j = ids[0], ids[1]   # oldest two of this level
+                if span is not None and \
+                        self.nodes[i].count + self.nodes[j].count > span:
+                    continue
+                pair = (i, j)
+                break
+            if pair is None:
+                break
+            self._merge_pair(*pair)
+        # checkpoint slots are finite: collapse the two oldest summaries
+        # regardless of level rather than overflow.
+        while len(self.nodes) > self.cfg.max_summaries:
+            self._merge_pair(0, 1)
+
+    # ------------------------------------------------------------ read
+    def root(self, include_buffer: bool = True):
+        """Union of all live summaries (+ the unreduced buffer as unit-ish
+        weighted raw records): (points (s,d), weights (s,), is_candidate)."""
+        pts = [nd.summary.points for nd in self.nodes]
+        wts = [nd.summary.weights for nd in self.nodes]
+        cand = [nd.summary.is_candidate for nd in self.nodes]
+        if include_buffer and self._buf_n:
+            pts.append(self._buf[:self._buf_n].copy())
+            wts.append(self._buf_w[:self._buf_n].copy())
+            cand.append(np.zeros((self._buf_n,), bool))
+        if not pts:
+            return (np.zeros((0, self.cfg.dim), np.float32),
+                    np.zeros((0,), np.float32), np.zeros((0,), bool))
+        return (np.concatenate(pts), np.concatenate(wts),
+                np.concatenate(cand))
+
+    @property
+    def total_weight(self) -> float:
+        _, w, _ = self.root()
+        return float(w.sum())
+
+    @property
+    def num_records(self) -> int:
+        return (sum(nd.summary.points.shape[0] for nd in self.nodes)
+                + self._buf_n)
+
+    # ------------------------------------------------------------ state
+    def pack_state(self) -> dict:
+        """Fixed-shape pytree of the full tree state (CheckpointManager-safe)."""
+        cfg, cap, S = self.cfg, self._cap, self.cfg.max_summaries
+        if len(self.nodes) > S:
+            raise RuntimeError(f"{len(self.nodes)} summaries > {S} slots")
+        pts = np.zeros((S, cap, cfg.dim), np.float32)
+        wts = np.zeros((S, cap), np.float32)
+        cand = np.zeros((S, cap), bool)
+        valid = np.zeros((S, cap), bool)
+        level = np.full((S,), -1, np.int32)
+        min_seq = np.zeros((S,), np.int64)
+        max_seq = np.zeros((S,), np.int64)
+        count = np.zeros((S,), np.int64)
+        for i, nd in enumerate(self.nodes):
+            s = nd.summary.points.shape[0]
+            pts[i, :s] = nd.summary.points
+            wts[i, :s] = nd.summary.weights
+            cand[i, :s] = nd.summary.is_candidate
+            valid[i, :s] = True
+            level[i] = nd.level
+            min_seq[i], max_seq[i], count[i] = nd.min_seq, nd.max_seq, nd.count
+        return {
+            "points": pts, "weights": wts, "is_candidate": cand,
+            "valid": valid, "level": level, "min_seq": min_seq,
+            "max_seq": max_seq, "count": count,
+            "buffer": self._buf.copy(), "buffer_w": self._buf_w.copy(),
+            "buffer_n": np.int64(self._buf_n),
+            "flushed": np.int64(self._flushed),
+            "total_ingested": np.int64(self.total_ingested),
+            "key_data": np.asarray(jax.random.key_data(self.key)),
+        }
+
+    @classmethod
+    def skeleton_state(cls, cfg: TreeConfig) -> dict:
+        """Zero state with the shapes pack_state produces — the ``tree_like``
+        argument CheckpointManager.restore needs."""
+        return cls(cfg).pack_state()
+
+    @classmethod
+    def from_state(cls, cfg: TreeConfig, state: dict) -> "StreamTree":
+        tree = cls(cfg)
+        g = {k: np.asarray(v) for k, v in state.items()}
+        tree.key = jax.random.wrap_key_data(
+            jnp.asarray(g["key_data"], jnp.uint32))
+        tree._buf = g["buffer"].astype(np.float32).copy()
+        tree._buf_w = g["buffer_w"].astype(np.float32).copy()
+        tree._buf_n = int(g["buffer_n"])
+        tree._flushed = int(g["flushed"])
+        tree.total_ingested = int(g["total_ingested"])
+        for i in range(cfg.max_summaries):
+            if int(g["level"][i]) < 0:
+                continue
+            v = g["valid"][i]
+            summ = WeightedSummary(
+                points=g["points"][i][v].astype(np.float32),
+                weights=g["weights"][i][v].astype(np.float32),
+                is_candidate=g["is_candidate"][i][v].astype(bool),
+                n_rounds=0,
+                total_weight=float(g["weights"][i][v].sum()))
+            tree.nodes.append(TreeNode(
+                summary=summ, level=int(g["level"][i]),
+                min_seq=int(g["min_seq"][i]), max_seq=int(g["max_seq"][i]),
+                count=int(g["count"][i])))
+        return tree

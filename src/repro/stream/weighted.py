@@ -1,0 +1,220 @@
+"""Weighted Summary-Outliers: Algorithm 1 generalized to weighted inputs.
+
+A record (x, w) stands for w coincident unit points.  Two changes from the
+unit-weight algorithm in ``repro.core.summary``:
+
+* Line 6 samples the m round-samples with probability proportional to
+  weight (a record of weight w is w times as likely as a unit record);
+* Line 8 grows the ball to the smallest radius rho_i whose captured
+  *weight mass* reaches beta * W_i (W_i = total remaining weight), and the
+  stopping rule |X_i| <= 8t becomes W_i <= 8t.
+
+With unit weights both rules reduce exactly to the paper's.  The progress
+guarantee is unchanged and deterministic: every round removes at least a
+beta fraction of the remaining *mass*, so the loop runs at most
+ceil(log(W/8t) / -log(1-beta)) rounds regardless of how the mass is
+distributed over records.
+
+Why this makes a summary-of-summaries well defined: a weighted summary Q of
+X conserves mass (sum of Q's weights == total weight of X) and each output
+record is an input point carrying the mass of the inputs mapped to it.
+Summarizing the concatenation of two summaries Q1 u Q2 therefore produces a
+summary of X1 u X2 whose information loss telescopes — each level of
+re-summarization adds at most one Algorithm-1 loss term on top of the loss
+already incurred below (triangle inequality through the intermediate
+representative).  That is the merge-and-reduce composition the stream tree
+(``repro.stream.tree``) relies on.
+
+Host-driven like ``summary_outliers_compact``: set logic in numpy, the
+distance inner loop stays jitted (``min_argmin``, Pallas-capable via
+``use_pallas``).  Stream leaves and merges are small (10^3..10^4 records),
+so the host loop is never the bottleneck; the latency-critical query path
+in ``repro.stream.service`` is fully jitted.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pdist.ops import min_argmin
+
+_FAR = 1e30  # sentinel coordinate for rows padded into a jit bucket
+
+
+def _bucket(n: int, lo: int = 256) -> int:
+    """Next power-of-two >= n (min lo): bounds the number of jit shapes.
+    Shared by the summarize and scoring paths (repro.stream.service)."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _min_argmin_bucketed(xr: np.ndarray, c: np.ndarray, *, metric: str,
+                         block_n: int, use_pallas: bool):
+    """min_argmin with the row count padded to a power-of-two bucket, so the
+    jitted kernel compiles once per bucket instead of once per round (the
+    remaining set shrinks every round and would otherwise retrace)."""
+    nr = xr.shape[0]
+    nb = _bucket(nr)
+    if nb > nr:
+        xr = np.concatenate(
+            [xr, np.full((nb - nr, xr.shape[1]), _FAR, np.float32)])
+    mind, amin = min_argmin(xr, c, metric=metric, block_n=block_n,
+                            use_pallas=use_pallas)
+    return np.asarray(mind)[:nr], np.asarray(amin)[:nr]
+
+
+class WeightedSummary(NamedTuple):
+    """Compact (no padding) weighted summary of a weighted point set.
+
+    points       (s, d) f32  — summary points (subset of the input rows)
+    weights      (s,) f32    — mass mapped to each point; conserves input mass
+    is_candidate (s,) bool   — True for survivors X_r (outlier candidates)
+    n_rounds     int         — rounds the ball-growing loop ran
+    total_weight float       — input mass (== weights.sum() up to fp error)
+    """
+
+    points: np.ndarray
+    weights: np.ndarray
+    is_candidate: np.ndarray
+    n_rounds: int
+    total_weight: float
+
+
+def max_rounds(total_weight: float, t: int, beta: float) -> int:
+    """Deterministic round bound: each round captures >= beta of the mass."""
+    stop = max(8 * t, 1)
+    if total_weight <= stop:
+        return 0
+    return max(1, int(math.ceil(math.log(total_weight / stop)
+                                / -math.log1p(-beta))))
+
+
+def weighted_summary_outliers(
+    points,
+    weights,
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    block_n: int = 65536,
+    use_pallas: bool = False,
+) -> WeightedSummary:
+    """Weighted Summary-Outliers over records (points[i], weights[i])."""
+    x = np.asarray(points, np.float32)
+    w = np.asarray(weights, np.float32).reshape(-1)
+    if x.ndim != 2 or x.shape[0] != w.shape[0]:
+        raise ValueError(f"points {x.shape} / weights {w.shape} mismatch")
+    keep = w > 0
+    x, w = x[keep], w[keep]
+    n = x.shape[0]
+    total = float(w.sum())
+    if n == 0:
+        return WeightedSummary(
+            points=np.zeros((0, x.shape[1] if x.ndim == 2 else 0), np.float32),
+            weights=np.zeros((0,), np.float32),
+            is_candidate=np.zeros((0,), bool),
+            n_rounds=0, total_weight=0.0)
+
+    kappa = max(k, max(1, math.ceil(math.log(max(n, 2)))))
+    m = max(1, int(math.ceil(alpha * kappa)))
+    stop = max(8 * t, 1)
+    bound = max_rounds(total, t, beta) + 4  # +4: fp slack on the mass sums
+
+    remaining = np.arange(n, dtype=np.int64)
+    acc_w = np.zeros(n, np.float32)          # mass captured per center
+    center_ids: list[np.ndarray] = []
+    rounds = 0
+    while remaining.size and float(w[remaining].sum()) > stop and rounds < bound:
+        key, sk = jax.random.split(key)
+        wr = w[remaining]
+        # Line 6 (weighted): sample m records with replacement, p ∝ weight.
+        # -inf-padded to the same bucket as the distance call (one trace per
+        # bucket, not per round).
+        logits = np.full((_bucket(wr.size),), -np.inf, np.float32)
+        logits[:wr.size] = np.log(wr)
+        pick = np.asarray(jax.random.categorical(sk, jnp.asarray(logits),
+                                                 shape=(m,)))
+        idx = remaining[pick]                 # global ids of this round's S_i
+        mind, amin = _min_argmin_bucketed(x[remaining], x[idx], metric=metric,
+                                          block_n=block_n,
+                                          use_pallas=use_pallas)
+        # Line 8 (weighted): smallest rho capturing >= beta * W_i of mass.
+        order = np.argsort(mind, kind="stable")
+        cumw = np.cumsum(wr[order])
+        kpos = int(np.searchsorted(cumw, beta * float(wr.sum())))
+        kpos = min(kpos, order.size - 1)
+        rho = mind[order[kpos]]
+        captured = mind <= rho                # samples sit at rho=0: always in
+        # Line 9: each captured record's full mass goes to its nearest sample.
+        np.add.at(acc_w, idx[amin[captured]], wr[captured])
+        center_ids.append(np.unique(idx))
+        remaining = remaining[~captured]
+        rounds += 1
+
+    centers = (np.unique(np.concatenate(center_ids)) if center_ids
+               else np.empty(0, np.int64))
+    # coincident sampled points can tie on argmin so one of them captures
+    # all the mass; drop the zero-mass twins to keep the weights>0 invariant
+    centers = centers[acc_w[centers] > 0]
+    pts = np.concatenate([x[centers], x[remaining]])
+    wts = np.concatenate([acc_w[centers], w[remaining]])
+    cand = np.concatenate([np.zeros(centers.size, bool),
+                           np.ones(remaining.size, bool)])
+    return WeightedSummary(points=pts.astype(np.float32),
+                           weights=wts.astype(np.float32),
+                           is_candidate=cand,
+                           n_rounds=rounds,
+                           total_weight=total)
+
+
+def merge_summaries(summaries: Sequence[WeightedSummary]) -> WeightedSummary:
+    """Concatenate weighted summaries (the 'merge' half of merge-and-reduce).
+
+    Pure union — no information is lost; mass is conserved exactly.
+    """
+    live = [s for s in summaries if s.points.shape[0]]
+    if not live:
+        return WeightedSummary(np.zeros((0, 0), np.float32),
+                               np.zeros((0,), np.float32),
+                               np.zeros((0,), bool), 0, 0.0)
+    return WeightedSummary(
+        points=np.concatenate([s.points for s in live]),
+        weights=np.concatenate([s.weights for s in live]),
+        is_candidate=np.concatenate([s.is_candidate for s in live]),
+        n_rounds=max(s.n_rounds for s in live),
+        total_weight=float(sum(s.total_weight for s in live)),
+    )
+
+
+def resummarize(
+    summaries: Sequence[WeightedSummary],
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    block_n: int = 65536,
+    use_pallas: bool = False,
+) -> WeightedSummary:
+    """The 'reduce' half: weighted Summary-Outliers on the merged union.
+
+    Keeps the full outlier budget t at every level so that up to t true
+    outliers survive as candidates through any number of merges.
+    """
+    merged = merge_summaries(summaries)
+    if merged.points.shape[0] == 0:
+        return merged
+    return weighted_summary_outliers(
+        merged.points, merged.weights, key, k=k, t=t, alpha=alpha, beta=beta,
+        metric=metric, block_n=block_n, use_pallas=use_pallas)

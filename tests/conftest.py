@@ -1,0 +1,23 @@
+"""Deterministic test environment.
+
+JAX randomness in this repo is explicit (every algorithm takes a key), but
+helpers and tests also use the *implicit* numpy / python RNGs.  Seed those
+per-test so ordering and -k selections cannot change outcomes, and pin the
+JAX PRNG implementation so key streams stay stable across jax upgrades
+that might flip the default.
+"""
+import os
+import random
+
+# must be set before jax initializes — conftest imports precede test modules
+os.environ.setdefault("JAX_DEFAULT_PRNG_IMPL", "threefry2x32")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_host_rngs():
+    random.seed(0)
+    np.random.seed(0)
+    yield

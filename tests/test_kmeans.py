@@ -3,7 +3,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional: only the property tests need hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (kmeans_minus_minus, kmeanspp_summary, pp_budget,
                         kmeans_parallel_summary, rand_summary)
@@ -69,16 +74,20 @@ def test_kmeans_parallel_comm_grows_with_sites():
     np.testing.assert_allclose(float(r5.summary.weights.sum()), 2000, rtol=1e-6)
 
 
-@settings(max_examples=10, deadline=None)
-@given(k=st.integers(1, 8), t=st.integers(0, 30), seed=st.integers(0, 10**6))
-def test_kmeans_mm_property(k, t, seed):
-    rng = np.random.default_rng(seed)
-    n = 300
-    x = rng.normal(size=(n, 3)).astype(np.float32)
-    sol = kmeans_minus_minus(jnp.asarray(x), jnp.ones((n,)),
-                             jnp.ones((n,), bool), jax.random.key(seed % 97),
-                             k=k, t=float(t), iters=10)
-    assert sol.centers.shape == (k, 3)
-    assert float(jnp.sum(sol.outlier)) <= t
-    assert np.isfinite(float(sol.cost))
-    assert float(sol.cost) >= 0
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(k=st.integers(1, 8), t=st.integers(0, 30), seed=st.integers(0, 10**6))
+    def test_kmeans_mm_property(k, t, seed):
+        rng = np.random.default_rng(seed)
+        n = 300
+        x = rng.normal(size=(n, 3)).astype(np.float32)
+        sol = kmeans_minus_minus(jnp.asarray(x), jnp.ones((n,)),
+                                 jnp.ones((n,), bool), jax.random.key(seed % 97),
+                                 k=k, t=float(t), iters=10)
+        assert sol.centers.shape == (k, 3)
+        assert float(jnp.sum(sol.outlier)) <= t
+        assert np.isfinite(float(sol.cost))
+        assert float(sol.cost) >= 0
+else:
+    def test_kmeans_mm_property():
+        pytest.importorskip("hypothesis")

@@ -1,0 +1,251 @@
+"""Streaming subsystem: weighted summaries, merge-and-reduce tree, service.
+
+Merge-semantics coverage demanded by the subsystem's correctness argument
+(see repro/stream/__init__.py):
+  * mass conservation through summarize / merge / re-summarize,
+  * ingest order cannot change the total-weight invariant,
+  * the tree's quantization loss stays within a constant factor of the
+    one-shot summary_outliers loss on the same data.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import information_loss, summary_outliers
+from repro.data.synthetic import gauss
+from repro.kernels.pdist.ops import min_argmin
+from repro.stream import (ServiceConfig, StreamService, StreamTree,
+                          TreeConfig, merge_summaries, record_cap,
+                          resummarize, weighted_summary_outliers)
+
+
+def _mk(n, d, seed, spread=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)) * spread).astype(np.float32)
+
+
+# --------------------------------------------------------- weighted summary
+def test_weighted_unit_invariants():
+    x = _mk(1500, 4, 0)
+    s = weighted_summary_outliers(x, np.ones(1500), jax.random.key(0),
+                                  k=8, t=30)
+    np.testing.assert_allclose(float(s.weights.sum()), 1500, rtol=1e-6)
+    assert float(s.weights[s.is_candidate].sum()) <= 8 * 30
+    assert (s.weights > 0).all()
+    assert s.points.shape[0] < 1500  # actually compressed
+
+
+def test_weighted_mass_conservation_arbitrary_weights():
+    rng = np.random.default_rng(1)
+    x = _mk(800, 3, 1)
+    w = rng.uniform(0.5, 5.0, size=800).astype(np.float32)
+    s = weighted_summary_outliers(x, w, jax.random.key(1), k=6, t=20)
+    np.testing.assert_allclose(float(s.weights.sum()), float(w.sum()),
+                               rtol=1e-5)
+
+
+def test_weighted_record_acts_like_duplicates():
+    """Summarizing (x, w) and the explicitly duplicated dataset must agree
+    on the conserved mass and produce summaries of similar size."""
+    rng = np.random.default_rng(2)
+    pts = _mk(400, 3, 2)
+    w = rng.integers(1, 5, size=400).astype(np.float32)
+    dup = np.repeat(pts, w.astype(int), axis=0)
+    s_w = weighted_summary_outliers(pts, w, jax.random.key(3), k=5, t=10)
+    s_d = weighted_summary_outliers(dup, np.ones(dup.shape[0]),
+                                    jax.random.key(3), k=5, t=10)
+    np.testing.assert_allclose(float(s_w.weights.sum()),
+                               float(s_d.weights.sum()), rtol=1e-5)
+
+
+def test_weighted_duplicates_keep_weights_positive():
+    """Coincident rows tie on argmin; the losing twin must not surface as a
+    zero-weight record (regression)."""
+    base = _mk(50, 3, 11)
+    dup = np.repeat(base, 40, axis=0)
+    s = weighted_summary_outliers(dup, np.ones(dup.shape[0]),
+                                  jax.random.key(11), k=5, t=10)
+    assert (s.weights > 0).all()
+    np.testing.assert_allclose(float(s.weights.sum()), dup.shape[0],
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------- merge semantics
+def test_merge_preserves_total_weight():
+    x = _mk(2000, 4, 3)
+    s1 = weighted_summary_outliers(x[:900], np.ones(900), jax.random.key(4),
+                                   k=8, t=25)
+    s2 = weighted_summary_outliers(x[900:], np.ones(1100), jax.random.key(5),
+                                   k=8, t=25)
+    m = merge_summaries([s1, s2])
+    np.testing.assert_allclose(float(m.weights.sum()), 2000, rtol=1e-6)
+    r = resummarize([s1, s2], jax.random.key(6), k=8, t=25)
+    np.testing.assert_allclose(float(r.weights.sum()), 2000, rtol=1e-5)
+    # reducing a union really reduces it
+    assert r.points.shape[0] <= m.points.shape[0]
+
+
+def test_tree_ingest_order_weight_invariant():
+    x = _mk(4096, 3, 4)
+    batches = [x[i:i + 512] for i in range(0, 4096, 512)]
+    totals = []
+    for perm_seed in (0, 1):
+        order = np.random.default_rng(perm_seed).permutation(len(batches))
+        tree = StreamTree(TreeConfig(dim=3, k=6, t=20, leaf_size=512))
+        for b in order:
+            tree.ingest(batches[b])
+        totals.append(tree.total_weight)
+        assert len(tree.nodes) <= 4  # binary counter: O(log) summaries
+    np.testing.assert_allclose(totals[0], 4096, rtol=1e-6)
+    np.testing.assert_allclose(totals[0], totals[1], rtol=1e-6)
+
+
+def test_tree_loss_within_constant_of_oneshot():
+    """Quantization loss of the tree root vs one-shot Algorithm 1 loss."""
+    x, _ = gauss(n_centers=8, per_center=500, t=40, sigma=0.1, seed=5)
+    n = x.shape[0]
+    tree = StreamTree(TreeConfig(dim=5, k=8, t=40, leaf_size=512))
+    tree.ingest(x)
+    pts, _, _ = tree.root()
+    d_tree, _ = min_argmin(jnp.asarray(x), jnp.asarray(pts), metric="l2sq")
+    tree_loss = float(jnp.sum(d_tree))
+    summ = summary_outliers(jnp.asarray(x), jax.random.key(0), k=8, t=40)
+    oneshot = float(information_loss(jnp.asarray(x), summ.sigma))
+    assert oneshot > 0
+    # merge-and-reduce compounds one Algorithm-1 loss term per level
+    # (O(log n) here); 25x leaves generous slack over the observed ~2-4x.
+    assert tree_loss <= 25.0 * oneshot
+
+
+def test_tree_sliding_window_evicts():
+    x = _mk(8192, 3, 6)
+    tree = StreamTree(TreeConfig(dim=3, k=5, t=10, leaf_size=512,
+                                 window=2048))
+    tree.ingest(x)
+    # everything older than the window is gone: remaining mass <= window
+    # (+ one eviction-granularity slack unit of window//4)
+    assert tree.total_weight <= 2048 + 512
+    oldest = min(nd.min_seq for nd in tree.nodes)
+    assert oldest >= 8192 - 2048 - 2048 // 4
+
+
+def test_tree_rejects_mismatched_weights():
+    tree = StreamTree(TreeConfig(dim=3, k=5, t=10, leaf_size=256))
+    with pytest.raises(ValueError):
+        tree.ingest(_mk(10, 3, 20), np.ones(20))   # silent truncation risk
+    with pytest.raises(ValueError):
+        tree.ingest(_mk(10, 3, 20), np.ones(4))
+    assert tree.total_ingested == 0
+
+
+def test_tree_checkpoint_state_roundtrip():
+    cfg = TreeConfig(dim=4, k=6, t=15, leaf_size=256)
+    tree = StreamTree(cfg)
+    tree.ingest(_mk(1500, 4, 7))
+    state = tree.pack_state()
+    tree2 = StreamTree.from_state(cfg, state)
+    p1, w1, c1 = tree.root()
+    p2, w2, c2 = tree2.root()
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(w1, w2)
+    np.testing.assert_array_equal(c1, c2)
+    assert tree2.total_ingested == tree.total_ingested
+    # restored tree keeps ingesting with the same rng stream
+    tree.ingest(_mk(600, 4, 8))
+    tree2.ingest(_mk(600, 4, 8))
+    np.testing.assert_allclose(tree.total_weight, tree2.total_weight,
+                               rtol=1e-6)
+    np.testing.assert_array_equal(tree.root()[0], tree2.root()[0])
+
+
+def test_record_cap_bounds_every_node():
+    cfg = TreeConfig(dim=3, k=6, t=12, leaf_size=256)
+    cap = record_cap(cfg)
+    tree = StreamTree(cfg)
+    tree.ingest(_mk(4096, 3, 9))
+    for nd in tree.nodes:
+        assert nd.summary.points.shape[0] <= cap
+
+
+# --------------------------------------------------------- service
+@pytest.fixture(scope="module")
+def served():
+    x, out_ids = gauss(n_centers=6, per_center=400, t=24, sigma=0.05, seed=10)
+    cfg = ServiceConfig(dim=5, k=6, t=24, leaf_size=512, refresh_every=1024,
+                        micro_batch=64, seed=10)
+    svc = StreamService(cfg)
+    svc.ingest(x)
+    return svc, cfg, x, out_ids
+
+
+def test_service_refresh_cadence(served):
+    svc, _, x, _ = served
+    # 2400 points / refresh_every=1024 -> at least 2 refreshes happened
+    assert int(svc.model.version) >= 2
+    assert float(svc.model.trained_weight) > 0
+
+
+def test_service_scores_inliers_vs_planted_far_point(served):
+    svc, _, x, out_ids = served
+    inlier_ids = np.setdiff1d(np.arange(x.shape[0]), out_ids)[:64]
+    res = svc.score(x[inlier_ids])
+    assert len(res) == 64
+    flagged = sum(r.is_outlier for r in res)
+    assert flagged <= 8  # the bulk of the clusters scores as inliers
+    far = svc.score(np.full((1, 5), 100.0, np.float32))[0]
+    assert far.is_outlier and far.outlier_score > 10
+    stats = svc.latency_stats()
+    assert stats["count"] >= 65 and np.isfinite(stats["p99_ms"])
+
+
+def test_service_drain_is_fifo_and_complete(served):
+    svc, _, x, _ = served
+    ids = svc.submit(x[:150])
+    res = svc.drain()
+    assert [r.request_id for r in res] == ids
+    assert svc.drain() == []
+
+
+def test_service_submit_rejects_bad_dim(served):
+    svc, _, x, _ = served
+    with pytest.raises(ValueError):
+        svc.submit(np.zeros((2, 3), np.float32))  # dim is 5
+    # queue untouched: valid requests still serve
+    assert len(svc.score(x[:4])) == 4
+
+
+def test_service_ingest_after_restore_with_smaller_cadence(tmp_path):
+    """A checkpoint may carry since_refresh >= the restoring config's
+    refresh_every; ingest must refresh instead of slicing backwards."""
+    from repro.checkpoint.manager import CheckpointManager
+    x = _mk(1600, 3, 12)
+    big = ServiceConfig(dim=3, k=4, t=8, leaf_size=256, refresh_every=4096)
+    svc = StreamService(big)
+    svc.ingest(x)   # since_refresh = 1600, no refresh yet
+    svc.save(CheckpointManager(tmp_path), step=1)
+    small = ServiceConfig(dim=3, k=4, t=8, leaf_size=256, refresh_every=1024)
+    restored = StreamService.restore(small, CheckpointManager(tmp_path))
+    restored.ingest(x[:512])
+    assert restored.tree.total_ingested == 1600 + 512
+    np.testing.assert_allclose(restored.tree.total_weight, 2112, rtol=1e-6)
+    assert int(restored.model.version) >= 1
+
+
+def test_service_checkpoint_restore_identical_scores(served, tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    svc, cfg, x, _ = served
+    q = x[64:128]
+    before = svc.score(q)
+    cm = CheckpointManager(tmp_path)
+    svc.save(cm, step=1)
+    restored = StreamService.restore(cfg, CheckpointManager(tmp_path))
+    after = restored.score(q)
+    assert int(restored.model.version) == int(svc.model.version)
+    for a, b in zip(before, after):
+        assert a.center == b.center
+        assert a.distance == b.distance          # bit-identical
+        assert a.outlier_score == b.outlier_score
+    # the restored service can keep serving the write path too
+    restored.ingest(x[:512])
+    assert restored.tree.total_ingested == svc.tree.total_ingested + 512

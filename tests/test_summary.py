@@ -5,7 +5,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional: only the property tests need hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (augmented_summary_outliers, information_loss,
                         kmeans_minus_minus, summary_outliers,
@@ -101,28 +106,32 @@ def test_tiny_dataset_no_rounds():
     assert int(summ.valid.sum()) == 20
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    n=st.integers(50, 800),
-    d=st.integers(1, 8),
-    k=st.integers(1, 12),
-    t=st.integers(1, 40),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_summary_property(n, d, k, t, seed):
-    """Property: invariants hold for arbitrary data/params."""
-    rng = np.random.default_rng(seed)
-    x = rng.normal(scale=rng.uniform(0.1, 10), size=(n, d)).astype(np.float32)
-    summ = summary_outliers(jnp.asarray(x), jax.random.key(seed % 1000),
-                            k=k, t=t)
-    np.testing.assert_allclose(float(summ.weights.sum()), n, rtol=1e-5)
-    assert int((summ.valid & summ.is_candidate).sum()) <= max(8 * t, n)
-    sig = np.asarray(summ.sigma)
-    assert ((0 <= sig) & (sig < n)).all()
-    # idempotent mapping onto summary members
-    sel = np.zeros(n, bool)
-    sel[np.asarray(summ.indices)[np.asarray(summ.valid)]] = True
-    assert sel[sig].all()
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(50, 800),
+        d=st.integers(1, 8),
+        k=st.integers(1, 12),
+        t=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_summary_property(n, d, k, t, seed):
+        """Property: invariants hold for arbitrary data/params."""
+        rng = np.random.default_rng(seed)
+        x = rng.normal(scale=rng.uniform(0.1, 10), size=(n, d)).astype(np.float32)
+        summ = summary_outliers(jnp.asarray(x), jax.random.key(seed % 1000),
+                                k=k, t=t)
+        np.testing.assert_allclose(float(summ.weights.sum()), n, rtol=1e-5)
+        assert int((summ.valid & summ.is_candidate).sum()) <= max(8 * t, n)
+        sig = np.asarray(summ.sigma)
+        assert ((0 <= sig) & (sig < n)).all()
+        # idempotent mapping onto summary members
+        sel = np.zeros(n, bool)
+        sel[np.asarray(summ.indices)[np.asarray(summ.valid)]] = True
+        assert sel[sig].all()
+else:
+    def test_summary_property():
+        pytest.importorskip("hypothesis")
 
 
 def test_augmented_compact_matches_jit_invariants():
