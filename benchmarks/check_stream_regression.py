@@ -1,0 +1,70 @@
+"""Perf/quality regression gate over ``BENCH_stream.json``.
+
+Reads the committed thresholds from ``benchmarks/stream_thresholds.json``
+and fails (exit 1) if the latest benchmark run breached any of them — the
+CI bench-smoke job runs this after ``benchmarks/run.py --only stream`` so
+a PR cannot silently trade away streaming model quality:
+
+  * ``cost_ratio_max``          — stream-vs-oneshot (k,t)-means objective
+                                  ratio of the single-host service;
+  * ``sharded_cost_ratio_max``  — same for the sharded service (slightly
+                                  looser: per-site roots re-summarize less
+                                  data per merge, so the tree is shallower
+                                  but each root is built from a 1/s sample);
+  * ``sharded_comm_frac_max``   — gathered root records per refresh as a
+                                  fraction of the stream length: the whole
+                                  point of the paper is that communication
+                                  is sublinear in n.
+
+    PYTHONPATH=src python benchmarks/check_stream_regression.py \
+        [--bench BENCH_stream.json] [--thresholds benchmarks/stream_thresholds.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+def check(bench: dict, thr: dict) -> list[str]:
+    failures = []
+
+    def gate(name, value, bound):
+        tag = "ok  " if value <= bound else "FAIL"
+        print(f"{tag} {name}: {value:.4f} (max {bound})")
+        if value > bound:
+            failures.append(name)
+
+    gate("cost_ratio", float(bench["cost_ratio"]), thr["cost_ratio_max"])
+    sh = bench.get("sharded")
+    if sh is not None:
+        gate("sharded_cost_ratio", float(sh["cost_ratio"]),
+             thr["sharded_cost_ratio_max"])
+        gate("sharded_comm_frac",
+             float(sh["refresh_comm_records"]) / max(int(bench["n"]), 1),
+             thr["sharded_comm_frac_max"])
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=str(_ROOT / "BENCH_stream.json"))
+    ap.add_argument("--thresholds",
+                    default=str(_ROOT / "benchmarks" / "stream_thresholds.json"))
+    args = ap.parse_args()
+    bench = json.loads(Path(args.bench).read_text())
+    thr = json.loads(Path(args.thresholds).read_text())
+    failures = check(bench, thr)
+    if failures:
+        print(f"regression gate FAILED: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,11 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.augmented import augmented_summary_compact
-from repro.core import (augmented_summary_outliers, kmeans_minus_minus,
-                        kmeans_parallel_summary, kmeanspp_summary,
-                        local_budget, rand_summary, summary_outliers_compact)
+from repro.core import (kmeans_minus_minus, kmeans_parallel_summary,
+                        kmeanspp_summary, local_budget, rand_summary)
 from repro.core.metrics import clustering_losses, outlier_scores
-from repro.data.synthetic import partition
 
 ALGOS = ("ball-grow", "k-means++", "k-means||", "rand")
 

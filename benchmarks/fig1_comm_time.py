@@ -7,7 +7,6 @@ k-means|| pays per-round gather+broadcast that grows with s (Fig 1a).
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 import jax

@@ -16,6 +16,8 @@ def main() -> None:
                     help="dataset scale override (default: per-bench scaled)")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,table3,table4,fig1,roofline,stream")
+    ap.add_argument("--sites", type=int, default=0,
+                    help="stream bench: also run the sharded service over N sites")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -57,7 +59,7 @@ def main() -> None:
 
     if want("stream"):
         from benchmarks.stream_bench import run as sb
-        res = sb(scale=args.scale or 1.0)
+        res = sb(scale=args.scale or 1.0, sites=args.sites)
         csv.append(f"stream/ingest,{1e6 / res['ingest_pts_per_s']:.2f},"
                    f"pts_per_s={res['ingest_pts_per_s']:.0f}")
         csv.append(f"stream/query,{res['query_p50_ms'] * 1e3:.0f},"
@@ -67,6 +69,17 @@ def main() -> None:
         csv.append(f"stream/refresh,{res['refresh_s'] * 1e6:.0f},"
                    f"oneshot_s={res['oneshot_s']:.2f};"
                    f"records={res['summary_records']}")
+        if "sharded" in res:
+            sh = res["sharded"]
+            csv.append(
+                f"stream/sharded{sh['sites']},"
+                f"{1e6 / sh['ingest_pts_per_s']:.2f},"
+                f"pts_per_s_per_site={sh['ingest_pts_per_s_per_site']:.0f};"
+                f"path={sh['path']};"
+                f"comm_bytes={sh['refresh_comm_bytes']};"
+                f"comm_records={sh['refresh_comm_records']};"
+                f"p99_ms={sh['query_p99_ms']:.3f};"
+                f"cost_ratio={sh['cost_ratio']:.3f}")
 
     if want("roofline"):
         from benchmarks.roofline import load, print_table

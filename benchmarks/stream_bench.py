@@ -10,10 +10,17 @@ Feeds the synthetic Gaussian workload (Section 5.1.1 generator) through
     acceptance bar is a ratio <= 1.5x,
   * wall time of a model refresh vs one-shot re-clustering.
 
+With ``--sites N`` the same workload additionally runs through the
+multi-host ``ShardedStreamService`` (host-simulated sites on CPU; the real
+``shard_map`` collective when the process has >= N devices) and the result
+gains a ``"sharded"`` section: per-site ingest throughput, refresh
+communication in records and bytes (the packed tree roots — the paper's
+one round), query latency and the sharded-vs-oneshot cost ratio.
+
 Emits ``BENCH_stream.json`` at the repo root so runs are comparable
 across PRs, and CSV lines via ``benchmarks/run.py --only stream``.
 
-    PYTHONPATH=src:. python benchmarks/stream_bench.py [--scale 1.0]
+    PYTHONPATH=src:. python benchmarks/stream_bench.py [--scale 1.0] [--sites 4]
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ import jax.numpy as jnp
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.data.synthetic import gauss
 from repro.kernels.pdist.ops import min_argmin
-from repro.stream import ServiceConfig, StreamService
+from repro.stream import (ServiceConfig, ShardedServiceConfig,
+                          ShardedStreamService, StreamService)
 
 _DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
 
@@ -43,7 +51,82 @@ def model_cost(x, centers, t, block_n=65536) -> float:
     return float(dist[: max(dist.size - t, 1)].sum())
 
 
+def run_sharded(x, oneshot_cost: float, *, sites: int, k: int, t: int,
+                seed: int, use_pallas: bool) -> dict:
+    """ShardedStreamService over the same stream: per-site ingest
+    throughput, refresh comm (records/bytes of the gathered roots), query
+    latency, quality vs the one-shot model."""
+    n, d = x.shape
+    batch = 4096
+    # a site sees ~n/sites points; size leaves so each site flushes several
+    # per refresh window, otherwise the "root" degenerates to the raw buffer
+    leaf = int(min(4096, max(256, n // (sites * 4))))
+    cfg = ShardedServiceConfig(
+        dim=d, k=k, t=t, n_sites=sites, leaf_size=leaf,
+        refresh_every=max(n // 4, batch), micro_batch=256,
+        site_budget="paper",   # round-robin routing is the dispatcher model
+        use_shard_map=len(jax.devices()) >= sites, use_pallas=use_pallas,
+        seed=seed)
+
+    warm = ShardedStreamService(cfg)               # compile outside the clock
+    warm.ingest(x[:cfg.refresh_every])
+    warm.score(x[:cfg.micro_batch])
+
+    svc = ShardedStreamService(cfg)
+    # the gathered-refresh program is cached per instance; hand the warm
+    # one over so the measured ingest loop doesn't pay shard_map compile
+    svc._fit_program = warm._fit_program
+    comm_records = comm_bytes = n_refresh = 0
+    t0 = time.perf_counter()
+    for i in range(0, n, batch):
+        svc.ingest(x[i:i + batch])
+        st = svc.last_refresh
+        if st is not None and st.version > n_refresh:
+            # several cadences can fire inside one ingest call; bill the
+            # unobserved ones at the latest refresh's (fixed-shape) payload
+            comm_records += st.comm_records * (st.version - n_refresh)
+            comm_bytes += st.comm_bytes * (st.version - n_refresh)
+            n_refresh = st.version
+    t_ingest = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc.refresh()
+    t_refresh = time.perf_counter() - t0
+    comm_records += svc.last_refresh.comm_records
+    comm_bytes += svc.last_refresh.comm_bytes
+
+    rng = np.random.default_rng(seed + 3)
+    svc.score(x[:cfg.micro_batch])
+    svc._latencies.clear()
+    n_waves, wave = 16, cfg.micro_batch
+    for _ in range(n_waves):
+        svc.submit(x[rng.integers(0, n, size=wave)])
+        svc.drain()
+    lat = svc.latency_stats()
+
+    cost = model_cost(x, np.asarray(svc.model.centers), t)
+    st = svc.last_refresh
+    return {
+        "sites": sites,
+        "path": st.path,
+        "ingest_pts_per_s": n / t_ingest,
+        "ingest_pts_per_s_per_site": n / sites / t_ingest,
+        "refresh_s": t_refresh,
+        "refreshes": int(st.version),
+        "root_rows": int(st.root_rows),
+        "refresh_comm_records": int(st.comm_records),
+        "refresh_comm_bytes": int(st.comm_bytes),
+        "total_comm_records": int(comm_records),
+        "total_comm_bytes": int(comm_bytes),
+        "query_p50_ms": lat["p50_ms"],
+        "query_p99_ms": lat["p99_ms"],
+        "stream_cost": cost,
+        "cost_ratio": cost / max(oneshot_cost, 1e-12),
+        "model_version": int(svc.model.version),
+    }
+
+
 def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
+        sites: int = 0,
         out_path: Path | str | None = _DEFAULT_OUT) -> dict:
     k, d = 20, 5
     per_center = max(int(2500 * scale), 200)
@@ -112,6 +195,10 @@ def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
         "cost_ratio": stream_cost / max(oneshot_cost, 1e-12),
         "model_version": int(svc.model.version),
     }
+    if sites > 0:
+        result["sharded"] = run_sharded(
+            x, oneshot_cost, sites=sites, k=k, t=t, seed=seed,
+            use_pallas=use_pallas)
     if out_path is not None:
         Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
     return result
@@ -122,10 +209,12 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--sites", type=int, default=0,
+                    help="also run the sharded service over N sites")
     ap.add_argument("--out", default=str(_DEFAULT_OUT))
     args = ap.parse_args()
     res = run(scale=args.scale, seed=args.seed, use_pallas=args.use_pallas,
-              out_path=args.out)
+              sites=args.sites, out_path=args.out)
     print(f"n={res['n']} (k={res['k']}, t={res['t']})")
     print(f"ingest : {res['ingest_pts_per_s']:,.0f} pts/s "
           f"({res['ingest_s']:.2f}s incl. cadence refreshes)")
@@ -136,6 +225,18 @@ def main() -> None:
           f"summary records vs one-shot {res['oneshot_s']:.2f}s on all points")
     print(f"quality: stream {res['stream_cost']:.4g} vs one-shot "
           f"{res['oneshot_cost']:.4g}  (ratio {res['cost_ratio']:.3f})")
+    if "sharded" in res:
+        sh = res["sharded"]
+        print(f"sharded[{sh['sites']} sites, {sh['path']}]: "
+              f"{sh['ingest_pts_per_s_per_site']:,.0f} pts/s/site "
+              f"({sh['ingest_pts_per_s']:,.0f} aggregate)")
+        print(f"  refresh comm: {sh['refresh_comm_records']} records / "
+              f"{sh['refresh_comm_bytes']} bytes per refresh "
+              f"({sh['total_comm_bytes']} bytes total over "
+              f"{sh['refreshes']} refreshes)")
+        print(f"  query p50 {sh['query_p50_ms']:.2f} ms  "
+              f"p99 {sh['query_p99_ms']:.2f} ms   "
+              f"cost ratio {sh['cost_ratio']:.3f}")
     print(f"wrote {args.out}")
 
 

@@ -24,7 +24,7 @@ from repro.data.tokens import PipelineConfig, TokenPipeline
 from repro.launch.steps import make_train_step
 from repro.models.config import ModelConfig
 from repro.models.layers import ShardCtx
-from repro.models.transformer import forward_train, init_params
+from repro.models.transformer import init_params
 from repro.optim import adamw
 from repro.runtime.straggler import StragglerMonitor
 
@@ -80,7 +80,6 @@ def main():
     def weighted_step(params, opt_state, tokens, w):
         def loss_fn(pp):
             from repro.models.layers import rmsnorm, unembed
-            from repro.models.transformer import ce_loss, _embed_inputs
             import repro.models.transformer as T
             x, _ = T._embed_inputs(pp, {"tokens": tokens}, cfg, ctx)
             S = x.shape[1]

@@ -49,8 +49,14 @@ class CheckpointManager:
         self._thread: threading.Thread | None = None
 
     # ------------------------------------------------------------ save
-    def save(self, step: int, tree, *, blocking: bool = False):
-        """Snapshot `tree` (any pytree of arrays) at `step`."""
+    def save(self, step: int, tree, *, blocking: bool = False, meta=None):
+        """Snapshot `tree` (any pytree of arrays) at `step`.
+
+        `meta`: optional JSON-serializable dict recorded in the manifest —
+        writer-side facts a restorer must agree on before interpreting the
+        leaves (e.g. the sharded stream service records its site count so a
+        checkpoint cannot be silently restored onto a different topology).
+        Read it back with `read_meta`."""
         leaves, treedef = _flatten(tree)
         # device -> host copy happens here (synchronously w.r.t. the arrays'
         # readiness) so training can donate/overwrite them right after.
@@ -63,7 +69,8 @@ class CheckpointManager:
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
-            manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+            manifest = {"step": step, "treedef": str(treedef),
+                        "meta": meta or {}, "leaves": []}
             for i, arr in enumerate(host_leaves):
                 name = f"arr_{i:05d}.npy"
                 np.save(tmp / name, arr)
@@ -107,6 +114,17 @@ class CheckpointManager:
     def latest_step(self):
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_meta(self, step: int | None = None) -> dict:
+        """The `meta` dict `save` recorded at `step` (default: latest).
+        Checkpoints written before meta existed read back as {}."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        manifest = json.loads(
+            (self.root / f"step_{step:09d}" / "manifest.json").read_text())
+        return manifest.get("meta", {})
 
     def restore(self, tree_like, step: int | None = None, *, shardings=None,
                 verify: bool = True):

@@ -11,4 +11,8 @@ from repro.core.rand_summary import rand_summary  # noqa: F401
 from repro.core.distributed import (  # noqa: F401
     DistClusterResult, distributed_cluster, simulate_coordinator, local_budget,
 )
+from repro.core.collective import (  # noqa: F401
+    gather_sites, gathered_bytes, payload_bytes, replicated_coordinator,
+    sites_mesh,
+)
 from repro.core.metrics import clustering_losses, outlier_scores  # noqa: F401

@@ -1,0 +1,118 @@
+"""Shared mesh / shard_map plumbing for the coordinator model.
+
+Every "one round of communication" program in this repo has the same shape:
+a per-site function runs under ``shard_map`` over a 1-D ``sites`` axis, does
+local work, exchanges fixed-shape payloads with a single ``all_gather``, and
+finishes with a replicated coordinator step whose result is identical on
+every site.  The one-shot path (``repro.core.distributed``) and the sharded
+streaming path (``repro.stream.sharded``) both follow it; this module holds
+the plumbing they would otherwise duplicate:
+
+* ``shard_map``          — version-compat wrapper (``jax.shard_map`` moved
+                           out of ``jax.experimental`` only in newer jax);
+* ``sites_mesh``         — the canonical 1-D mesh over ``sites``;
+* ``gather_sites``       — all_gather a pytree over the axis and collapse
+                           the site dim, i.e. "send every site's summary to
+                           the coordinator" as one collective;
+* ``replicated_coordinator`` — wraps the per-site fn so callers stop hand
+                           rolling the ``[None]`` / take-``[0]`` dance for
+                           replicated outputs;
+* ``payload_bytes`` / ``gathered_bytes`` — communication accounting: the
+  bytes one site contributes to an all_gather, and the total a refresh puts
+  on the wire.  The paper measures communication in summary records; these
+  give the byte-level view the benchmarks report alongside it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def shard_map(fn, mesh: Mesh, *, in_specs, out_specs):
+    """``jax.shard_map`` where available, ``jax.experimental.shard_map``
+    otherwise (the public alias only exists in newer jax releases)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        # the experimental version predates replication rules for while-loops
+        # (which every k-means inner loop is) — disable the check there.
+        from jax.experimental.shard_map import shard_map as esm
+        return esm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def sites_mesh(n_sites: int | None = None, *, axis: str = "sites") -> Mesh:
+    """1-D mesh over ``axis``: one site per device (default: all devices)."""
+    n = n_sites or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
+
+
+def gather_sites(tree, axis: str = "sites"):
+    """Inside shard_map: all_gather every leaf over ``axis`` and collapse the
+    gathered site dim, so a per-site ``(cap, ...)`` leaf becomes the
+    coordinator's ``(s * cap, ...)`` union.  THE one round of communication:
+    on hardware this lowers to one ICI collective per leaf."""
+
+    def g(a):
+        ga = jax.lax.all_gather(a, axis)          # (s, cap, ...)
+        return ga.reshape((-1,) + ga.shape[2:])   # (s * cap, ...)
+
+    return jax.tree_util.tree_map(g, tree)
+
+
+def replicated_coordinator(per_site, mesh: Mesh, *, axis: str = "sites",
+                           n_sharded: int = 1):
+    """shard_map ``per_site`` over ``axis`` and unstack its replicated result.
+
+    The first ``n_sharded`` arguments are sharded on their leading dim (each
+    site sees its block with the leading site dim kept, length 1); remaining
+    arguments are replicated.  ``per_site`` must return a pytree of arrays
+    that is *identical on every site* (the coordinator result after a
+    ``gather_sites``); the wrapper stacks them over sites and returns site
+    0's copy, so callers get the coordinator view directly.
+
+    The returned callable is jit-wrapped around one stable closure per
+    argument count, so repeated invocations (e.g. every streaming refresh)
+    reuse the compiled program instead of re-tracing — hold on to it.
+    """
+
+    def wrapped(*args):
+        out = per_site(*args)
+        return jax.tree_util.tree_map(lambda a: a[None], out)
+
+    programs: dict[int, object] = {}   # arg count -> jitted shard_map program
+
+    def call(*args):
+        if len(args) < n_sharded:
+            raise ValueError(f"{len(args)} args but n_sharded={n_sharded}")
+        fn = programs.get(len(args))
+        if fn is None:
+            in_specs = tuple(P(axis) if i < n_sharded else P()
+                             for i in range(len(args)))
+            fn = jax.jit(shard_map(wrapped, mesh,
+                                   in_specs=in_specs, out_specs=P(axis)))
+            programs[len(args)] = fn
+        out = fn(*args)
+        return jax.tree_util.tree_map(lambda a: a[0], out)
+
+    return call
+
+
+def payload_bytes(tree) -> int:
+    """Bytes one site contributes to an all_gather of ``tree`` (its padded
+    per-site payload — what actually crosses the interconnect, as opposed to
+    the paper's valid-record count)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        dt = np.dtype(leaf.dtype)
+        total += int(math.prod(leaf.shape)) * dt.itemsize
+    return total
+
+
+def gathered_bytes(tree, n_sites: int) -> int:
+    """Total bytes one all_gather of per-site ``tree`` moves: every one of
+    the ``n_sites`` participants contributes its payload once."""
+    return payload_bytes(tree) * n_sites

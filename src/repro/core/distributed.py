@@ -19,18 +19,18 @@ Partition modes: ``random`` uses the paper's local budget t_i = 2t/s
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.augmented import augmented_summary_outliers
-from repro.core.kmeans_mm import OutlierClustering, kmeans_minus_minus
-from repro.core.summary import Summary, summary_outliers, summary_outliers_compact, _plan
+from repro.core.collective import gather_sites, replicated_coordinator
+from repro.core.kmeans_mm import kmeans_minus_minus
+from repro.core.summary import summary_outliers, summary_outliers_compact
 
 
 class DistClusterResult(NamedTuple):
@@ -51,7 +51,6 @@ def local_budget(t: int, s: int, partition: str) -> int:
 def _second_level(points, weights, valid, gids, key, *, k, t, iters, metric, block_n):
     sol = kmeans_minus_minus(points, weights, valid, key, k=k, t=float(t),
                              iters=iters, metric=metric, block_n=block_n)
-    cap_out = points.shape[0]
     out_ids = jnp.where(sol.outlier, gids, -1)
     order = jnp.argsort(~sol.outlier)  # flagged first
     return sol, out_ids[order], order
@@ -83,37 +82,24 @@ def distributed_cluster(
         summ = summarize(x_local, skey, k=k, t=t_i, metric=metric, block_n=block_n)
         gids = jnp.where(summ.valid, summ.indices + site * n_per, -1)
         # --- the one round of communication ---
-        pts = jax.lax.all_gather(summ.points, axis)        # (s, cap, d)
-        wts = jax.lax.all_gather(summ.weights, axis)
-        val = jax.lax.all_gather(summ.valid, axis)
-        gid = jax.lax.all_gather(gids, axis)
-        cap = summ.points.shape[0]
-        pts = pts.reshape(s * cap, d)
-        wts = wts.reshape(s * cap)
-        val = val.reshape(s * cap)
-        gid = gid.reshape(s * cap)
+        pts, wts, val, gid = gather_sites(
+            (summ.points, summ.weights, summ.valid, gids), axis)
         # --- replicated second level at the "coordinator" ---
         sol, out_ids_sorted, _ = _second_level(
             pts, wts, val, gid, jax.random.fold_in(key, 2**31 - 1),
             k=k, t=t, iters=second_iters, metric=metric, block_n=block_n)
         comm = val.sum().astype(jnp.float32)
-        return (sol.centers[None], out_ids_sorted[None], gid[None],
-                wts[None], comm[None], sol.cost[None])
+        return (sol.centers, out_ids_sorted, gid, wts, comm, sol.cost)
 
-    spec_in = P(axis)
-    fn = jax.shard_map(
-        per_site, mesh=mesh,
-        in_specs=(spec_in, P()),
-        out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-    )
+    fn = replicated_coordinator(per_site, mesh, axis=axis, n_sharded=1)
     centers, out_ids, gids, wts, comm, cost = fn(x_parts, key)
     return DistClusterResult(
-        centers=centers[0],
-        outlier_ids=out_ids[0],
-        summary_ids=gids[0],
-        summary_weights=wts[0],
-        comm_records=comm[0],
-        cost=cost[0],
+        centers=centers,
+        outlier_ids=out_ids,
+        summary_ids=gids,
+        summary_weights=wts,
+        comm_records=comm,
+        cost=cost,
     )
 
 

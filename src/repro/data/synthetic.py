@@ -37,6 +37,41 @@ def gauss(
     return x.astype(np.float32), np.sort(out_ids)
 
 
+def drifting_gauss(
+    n_phases: int = 3,
+    n_centers: int = 8,
+    per_center: int = 2_000,
+    d: int = 5,
+    sigma: float = 0.05,
+    drift: float = 4.0,
+    seed: int = 0,
+):
+    """Concept-shifting stream for sliding-window evaluation.
+
+    Phase p draws ``n_centers * per_center`` points from fresh uniform
+    centers inside the shifted box ``[p * drift, p * drift + 1]^d`` (rows
+    shuffled within a phase, phases concatenated in stream order), so each
+    phase occupies a disjoint region: a model fit on a window covering only
+    the newest phase should sit in the newest box, while a full-stream model
+    must split its k centers across all phases.
+
+    Returns (X float32 (n_phases * n_centers * per_center, d) in stream
+    order, phase_ids int64 (n,), centers float32 (n_phases, n_centers, d)).
+    """
+    rng = np.random.default_rng(seed)
+    xs, phases, centers = [], [], []
+    for p in range(n_phases):
+        c = rng.uniform(0.0, 1.0, size=(n_centers, d)) + p * drift
+        x = np.repeat(c, per_center, axis=0) + rng.normal(
+            0.0, sigma, size=(n_centers * per_center, d))
+        rng.shuffle(x, axis=0)
+        xs.append(x)
+        phases.append(np.full(x.shape[0], p))
+        centers.append(c)
+    return (np.concatenate(xs).astype(np.float32), np.concatenate(phases),
+            np.stack(centers).astype(np.float32))
+
+
 def kdd_like(n: int = 500_000, d: int = 34, t_frac: float = 0.0093, seed: int = 0):
     rng = np.random.default_rng(seed)
     big_frac = np.array([0.196, 0.216, 0.568])          # normal/neptune/smurf

@@ -116,6 +116,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: one dict per program
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

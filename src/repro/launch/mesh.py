@@ -28,6 +28,8 @@ def make_production_mesh(*, multi_pod: bool = False, dp_tp: tuple | None = None)
 
 def make_site_mesh(n_sites: int | None = None):
     """1-D mesh over ``sites`` for the paper's distributed clustering job
-    (Algorithm 3): one site per device."""
-    n = n_sites or len(jax.devices())
-    return jax.make_mesh((n,), ("sites",))
+    (Algorithm 3) and the sharded streaming service: one site per device.
+    Delegates to ``repro.core.collective`` so the one-shot and streaming
+    paths share one definition of the sites axis."""
+    from repro.core.collective import sites_mesh
+    return sites_mesh(n_sites)

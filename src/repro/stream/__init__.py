@@ -34,17 +34,41 @@ The root of the tree is therefore exactly what the paper's coordinator
 sees in the distributed setting — a union of weighted summaries — and the
 same second-level weighted k-means-- yields the serving model.
 
+Multi-host topology (sites -> trees -> all_gather roots -> global model)
+------------------------------------------------------------------------
+``ShardedStreamService`` runs the same pipeline over a mesh axis
+``sites``: each DP shard owns its own ``StreamTree`` (leaf ingest,
+merge-and-reduce, window eviction all stay site-local), and on the refresh
+cadence every site contributes its root, padded to one fixed record
+capacity, to a single ``all_gather`` — the paper's one round of
+communication, shared with ``repro.core.distributed`` through
+``repro.core.collective``.  The second-level weighted k-means-- then runs
+replicated on the union, so one global model serves every site and global
+outliers that are locally unremarkable are still caught (Algorithm 3's
+guarantee, kept under streaming).  Communication per refresh is exactly
+the packed roots; ``RefreshStats`` reports it in records and bytes.
+
+Model refresh is double-buffered (``async_refresh=True``): the next model
+fits on a worker thread from a root snapshot while ingest continues and
+queries score against the previous model — same ModelState bits, later
+install.
+
 Modules: ``weighted`` (weighted Algorithm 1 + merge/reduce primitives),
 ``tree`` (buffer tree, sliding-window eviction, checkpointable state),
-``service`` (micro-batched scoring front end + CheckpointManager glue).
+``service`` (micro-batched scoring front end, double-buffered refresh +
+CheckpointManager glue), ``sharded`` (per-site trees + gathered refresh).
 
-Follow-ons tracked in ROADMAP.md: async model refresh off the ingest
-thread, multi-host serving (shard the tree by site, all_gather roots).
+Remaining follow-on tracked in ROADMAP.md: validate Pallas scoring on
+real TPU hardware.
 """
 from repro.stream.weighted import (  # noqa: F401
     WeightedSummary, merge_summaries, resummarize, weighted_summary_outliers,
 )
 from repro.stream.tree import StreamTree, TreeConfig, record_cap  # noqa: F401
 from repro.stream.service import (  # noqa: F401
-    ModelState, QueryResult, ServiceConfig, StreamService,
+    ModelState, QueryResult, ServiceConfig, ServingFrontEnd, StreamService,
+    fit_model,
+)
+from repro.stream.sharded import (  # noqa: F401
+    RefreshStats, ShardedServiceConfig, ShardedStreamService,
 )

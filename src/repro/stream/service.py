@@ -13,6 +13,15 @@ shape means exactly one compile per (batch, model) shape — the hot path
 never retraces.  Per-request latency (enqueue -> scored) is recorded for
 p50/p99 reporting.
 
+Double-buffered refresh (``async_refresh=True``): a cadence refresh
+snapshots the tree root on the ingest thread, then fits the next
+``ModelState`` on a worker thread while ingest keeps running and queries
+keep scoring against the *old* model; the new model is installed at the
+next ingest/drain boundary (``poll_refresh``).  The fit is a pure function
+of (root snapshot, version, model key), so the async model is bit-identical
+to what a blocking refresh at the same boundary would have produced — only
+the install time moves.
+
 Outlier scoring: a request's score is d(x, nearest center) / threshold,
 where threshold is the largest inlier distance seen when the model was
 fit; score > 1 flags the point as an outlier under the current model.
@@ -20,14 +29,20 @@ fit; score > 1 flags the point as an outlier under the current model.
 Restart story: ``save``/``restore`` round-trip the tree + model + service
 counters through ``CheckpointManager`` (fixed-shape pytree, crc-verified,
 atomic publish), so a restored service returns bit-identical scores.
+
+The read path, model double-buffering and checkpoint glue live in
+``ServingFrontEnd`` and are shared with the multi-host
+``repro.stream.sharded.ShardedStreamService``; ``StreamService`` adds the
+single-host tree write path.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from collections import deque
-from typing import NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +52,6 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.kernels.pdist.ops import min_argmin
 from repro.stream.tree import StreamTree, TreeConfig
-from repro.stream.weighted import _bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +67,7 @@ class ServiceConfig:
     block_n: int = 16384
     use_pallas: bool = False
     window: Optional[int] = None
+    async_refresh: bool = False      # fit cadence models off the ingest path
     seed: int = 0
 
     def tree_config(self) -> TreeConfig:
@@ -87,81 +102,163 @@ def _score_batch(x, centers, threshold, *, metric, block_n, use_pallas):
     return dist, amin, score
 
 
-class StreamService:
-    def __init__(self, cfg: ServiceConfig, key: jax.Array | None = None):
+def fit_model(pts, wts, valid, key, version, *, k, t, iters, metric,
+              block_n, use_pallas) -> ModelState:
+    """Second-level weighted k-means-- on a (padded) root -> ModelState.
+
+    Pure function of its inputs — the one coordinator step every serving
+    path (single-host, sharded, sync or async refresh) funnels through.
+    """
+    sol = kmeans_minus_minus(
+        pts, wts, valid, key, k=k, t=float(t), iters=iters, metric=metric,
+        block_n=block_n, use_pallas=use_pallas)
+    inlier = valid & ~sol.outlier
+    threshold = jnp.where(inlier, sol.distances, -jnp.inf).max()
+    threshold = jnp.maximum(threshold, 1e-12).astype(jnp.float32)
+    trained = jnp.sum(wts * valid).astype(jnp.float32)
+    return ModelState(
+        centers=sol.centers, threshold=threshold,
+        cost=sol.cost.astype(jnp.float32),
+        version=jnp.int32(version),
+        trained_weight=trained)
+
+
+class ServingFrontEnd:
+    """Micro-batched read path + double-buffered model state.
+
+    Subclasses own the write path and provide ``_fit_closure(version)``: a
+    zero-arg callable, with all inputs already snapshotted on the calling
+    thread, that computes the next ``ModelState``.  The front end decides
+    *when* it runs (inline for blocking refreshes, on a worker thread for
+    async ones) and installs the result.
+    """
+
+    def __init__(self, cfg):
         self.cfg = cfg
-        key = key if key is not None else jax.random.key(cfg.seed)
-        kt, self._model_key = jax.random.split(key)
-        self.tree = StreamTree(cfg.tree_config(), kt)
         self.model: Optional[ModelState] = None
-        self._since_refresh = 0
         self._queue: deque = deque()   # (id, row (d,), t_enqueue)
         self._next_id = 0
         self._latencies: list[float] = []
+        self._worker: Optional[threading.Thread] = None
+        self._worker_box: list = []
+        self._backlog = False
+        self._next_version = 0
+        self._since_refresh = 0
 
     # ------------------------------------------------------------ write path
-    def ingest(self, points, weights=None) -> None:
-        x = np.asarray(points, np.float32)
-        if x.ndim == 1:
-            x = x[None, :]
-        w = None if weights is None else np.asarray(weights,
-                                                    np.float32).reshape(-1)
-        if w is not None and w.shape[0] != x.shape[0]:
-            raise ValueError(f"{w.shape[0]} weights for {x.shape[0]} points")
-        # chunk by the refresh cadence so one huge call still refreshes on
-        # schedule rather than once at the end
-        i, n = 0, x.shape[0]
-        while i < n:
-            take = min(self.cfg.refresh_every - self._since_refresh, n - i)
-            if take <= 0:   # e.g. restored with a smaller refresh_every
-                self.refresh()
-                continue
-            self.tree.ingest(x[i:i + take],
-                             None if w is None else w[i:i + take])
-            self._since_refresh += take
-            i += take
-            if self._since_refresh >= self.cfg.refresh_every:
-                self.refresh()
-
-    def refresh(self) -> ModelState:
-        """Fit weighted k-means-- on the tree root; bump the model version."""
-        cfg = self.cfg
-        pts, wts, _ = self.tree.root()
-        s = pts.shape[0]
-        if s == 0:
-            raise RuntimeError("refresh() before any point was ingested")
-        pad = _bucket(s) - s
-        pts_p = jnp.asarray(np.pad(pts, ((0, pad), (0, 0))))
-        wts_p = jnp.asarray(np.pad(wts, (0, pad)))
-        valid = jnp.arange(s + pad) < s
-        version = 1 if self.model is None else int(self.model.version) + 1
-        sol = kmeans_minus_minus(
-            pts_p, wts_p, valid, jax.random.fold_in(self._model_key, version),
-            k=cfg.k, t=float(cfg.t), iters=cfg.second_iters, metric=cfg.metric,
-            block_n=cfg.block_n, use_pallas=cfg.use_pallas)
-        inlier = valid & ~sol.outlier
-        threshold = jnp.where(inlier, sol.distances, -jnp.inf).max()
-        threshold = jnp.maximum(threshold, 1e-12).astype(jnp.float32)
-        self.model = ModelState(
-            centers=sol.centers, threshold=threshold,
-            cost=sol.cost.astype(jnp.float32),
-            version=jnp.int32(version),
-            trained_weight=jnp.float32(float(wts.sum())))
-        self._since_refresh = 0
-        return self.model
-
-    # ------------------------------------------------------------ read path
-    def submit(self, points) -> list[int]:
-        """Enqueue query rows; returns their request ids."""
+    def _validate_points(self, points, weights):
         x = np.asarray(points, np.float32)
         if x.ndim == 1:
             x = x[None, :]
         if x.ndim != 2 or x.shape[1] != self.cfg.dim:
-            # reject here, where the caller can handle it — a bad row that
-            # reaches drain() would crash mid-batch after requests were
-            # already dequeued
-            raise ValueError(f"expected (n, {self.cfg.dim}) queries, "
+            raise ValueError(f"expected (n, {self.cfg.dim}) points, "
                              f"got {x.shape}")
+        w = None if weights is None else np.asarray(weights,
+                                                    np.float32).reshape(-1)
+        if w is not None and w.shape[0] != x.shape[0]:
+            raise ValueError(f"{w.shape[0]} weights for {x.shape[0]} points")
+        return x, w
+
+    def _ingest_cadenced(self, x, w, sink) -> None:
+        """Feed (x, w) to ``sink(chunk_x, chunk_w)`` in chunks bounded by
+        the refresh cadence, so one huge call still refreshes on schedule
+        rather than once at the end."""
+        i, n = 0, x.shape[0]
+        while i < n:
+            take = min(self.cfg.refresh_every - self._since_refresh, n - i)
+            if take <= 0:   # e.g. restored with a smaller refresh_every
+                self._cadence_refresh()
+                continue
+            sink(x[i:i + take], None if w is None else w[i:i + take])
+            self._since_refresh += take
+            i += take
+            if self._since_refresh >= self.cfg.refresh_every:
+                self._cadence_refresh()
+
+    def _cadence_refresh(self) -> None:
+        self.refresh(blocking=not self.cfg.async_refresh)
+
+    # ------------------------------------------------------------ refresh
+    def _fit_closure(self, version: int) -> Callable[[], ModelState]:
+        raise NotImplementedError
+
+    def refresh(self, *, blocking: bool = True) -> Optional[ModelState]:
+        """Fit a new model on the current root.
+
+        blocking=True (default) installs it before returning; False hands
+        the fit to a worker thread (the root snapshot is still taken here,
+        synchronously) and returns None — the model appears at the next
+        ``poll_refresh``/``drain``/``ingest`` boundary.  An async refresh
+        requested while one is already in flight is coalesced: it re-fires
+        on the newest root as soon as the in-flight fit lands.  Either way
+        the cadence counter restarts.
+        """
+        if blocking:
+            self.join_refresh()
+            self._next_version += 1
+            model = self._fit_closure(self._next_version)()
+            self.model = model
+            self._since_refresh = 0
+            return model
+        if self._worker is not None:
+            self._backlog = True
+        else:
+            self._spawn_fit()
+        self._since_refresh = 0
+        return None
+
+    def _spawn_fit(self) -> None:
+        self._next_version += 1
+        fit = self._fit_closure(self._next_version)
+        box: list = []
+
+        def run():
+            try:
+                box.append(("ok", fit()))
+            except BaseException as e:  # surfaced on the caller at poll/join
+                box.append(("err", e))
+
+        self._worker_box = box
+        self._worker = threading.Thread(
+            target=run, name="stream-refresh", daemon=True)
+        self._worker.start()
+
+    def poll_refresh(self) -> bool:
+        """Install a finished background fit, if any.  Returns True iff the
+        serving model changed.  Re-raises a failed fit's exception here, on
+        the caller's thread."""
+        w = self._worker
+        if w is None or w.is_alive():
+            return False
+        w.join()
+        status, payload = self._worker_box[0]
+        self._worker, self._worker_box = None, []
+        if status == "err":
+            self._backlog = False   # don't respawn on top of a failed fit
+            raise payload
+        self.model = payload
+        if self._backlog:
+            self._backlog = False
+            self._spawn_fit()
+        return True
+
+    def join_refresh(self) -> None:
+        """Block until no refresh is in flight (incl. a coalesced backlog)."""
+        while self._worker is not None:
+            self._worker.join()
+            self.poll_refresh()
+
+    @property
+    def refresh_in_flight(self) -> bool:
+        return self._worker is not None
+
+    # ------------------------------------------------------------ read path
+    def submit(self, points) -> list[int]:
+        """Enqueue query rows; returns their request ids."""
+        # validate here, where the caller can handle it — a bad row that
+        # reaches drain() would crash mid-batch after requests were
+        # already dequeued
+        x, _ = self._validate_points(points, None)
         now = time.perf_counter()
         ids = []
         for row in x:
@@ -172,6 +269,9 @@ class StreamService:
 
     def drain(self, max_requests: Optional[int] = None) -> list[QueryResult]:
         """Serve queued requests in micro-batches against the current model."""
+        self.poll_refresh()
+        if self.model is None:
+            self.join_refresh()   # a first async refresh may be in flight
         if self.model is None:
             raise RuntimeError("no model yet — call refresh() first")
         cfg = self.cfg
@@ -224,7 +324,52 @@ class StreamService:
                 "cost": m.cost, "version": m.version,
                 "trained_weight": m.trained_weight}
 
+    @staticmethod
+    def _model_skeleton(cfg) -> dict:
+        return {"centers": jnp.zeros((cfg.k, cfg.dim), jnp.float32),
+                "threshold": jnp.float32(0), "cost": jnp.float32(0),
+                "version": jnp.int32(0), "trained_weight": jnp.float32(0)}
+
+    def _install_model_arrays(self, md: dict) -> None:
+        if int(md["version"]) > 0:
+            self.model = ModelState(
+                centers=jnp.asarray(md["centers"], jnp.float32),
+                threshold=jnp.asarray(md["threshold"], jnp.float32),
+                cost=jnp.asarray(md["cost"], jnp.float32),
+                version=jnp.asarray(md["version"], jnp.int32),
+                trained_weight=jnp.asarray(md["trained_weight"], jnp.float32))
+        self._next_version = int(md["version"])
+
+
+class StreamService(ServingFrontEnd):
+    def __init__(self, cfg: ServiceConfig, key: jax.Array | None = None):
+        super().__init__(cfg)
+        key = key if key is not None else jax.random.key(cfg.seed)
+        kt, self._model_key = jax.random.split(key)
+        self.tree = StreamTree(cfg.tree_config(), kt)
+
+    # ------------------------------------------------------------ write path
+    def ingest(self, points, weights=None) -> None:
+        self.poll_refresh()
+        x, w = self._validate_points(points, weights)
+        self._ingest_cadenced(x, w, self.tree.ingest)
+
+    def _fit_closure(self, version: int):
+        """Snapshot the tree root now; fit later (possibly on a worker)."""
+        cfg = self.cfg
+        if self.tree.num_records == 0:
+            raise RuntimeError("refresh() before any point was ingested")
+        pts, wts, valid = self.tree.packed_root()
+        key = jax.random.fold_in(self._model_key, version)
+        return functools.partial(
+            fit_model, jnp.asarray(pts), jnp.asarray(wts), jnp.asarray(valid),
+            key, version, k=cfg.k, t=cfg.t, iters=cfg.second_iters,
+            metric=cfg.metric, block_n=cfg.block_n,
+            use_pallas=cfg.use_pallas)
+
+    # ------------------------------------------------------------ checkpoint
     def _state(self) -> dict:
+        self.join_refresh()   # a half-fitted model must not race the snapshot
         return {
             "tree": self.tree.pack_state(),
             "model": self._model_arrays(),
@@ -239,20 +384,24 @@ class StreamService:
         cfg = self.cfg
         return {
             "tree": StreamTree.skeleton_state(cfg.tree_config()),
-            "model": {"centers": jnp.zeros((cfg.k, cfg.dim), jnp.float32),
-                      "threshold": jnp.float32(0), "cost": jnp.float32(0),
-                      "version": jnp.int32(0), "trained_weight": jnp.float32(0)},
+            "model": self._model_skeleton(cfg),
             "counters": {"since_refresh": np.int64(0), "next_id": np.int64(0),
                          "model_key": np.zeros((2,), np.uint32)},
         }
 
     def save(self, manager: CheckpointManager, step: int, *,
              blocking: bool = True) -> None:
-        manager.save(step, self._state(), blocking=blocking)
+        manager.save(step, self._state(), blocking=blocking,
+                     meta={"format": "stream-service-v1"})
 
     @classmethod
     def restore(cls, cfg: ServiceConfig, manager: CheckpointManager,
                 step: int | None = None) -> "StreamService":
+        fmt = manager.read_meta(step).get("format")
+        if fmt is not None and fmt != "stream-service-v1":
+            raise ValueError(
+                f"checkpoint format {fmt!r} is not a single-host stream "
+                f"checkpoint — restore it with the service that wrote it")
         svc = cls(cfg)
         state, _ = manager.restore(svc._skeleton(), step)
         svc.tree = StreamTree.from_state(cfg.tree_config(), state["tree"])
@@ -260,12 +409,5 @@ class StreamService:
         svc._next_id = int(state["counters"]["next_id"])
         svc._model_key = jax.random.wrap_key_data(
             jnp.asarray(state["counters"]["model_key"], jnp.uint32))
-        md = state["model"]
-        if int(md["version"]) > 0:
-            svc.model = ModelState(
-                centers=jnp.asarray(md["centers"], jnp.float32),
-                threshold=jnp.asarray(md["threshold"], jnp.float32),
-                cost=jnp.asarray(md["cost"], jnp.float32),
-                version=jnp.asarray(md["version"], jnp.int32),
-                trained_weight=jnp.asarray(md["trained_weight"], jnp.float32))
+        svc._install_model_arrays(state["model"])
         return svc

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.stream.weighted import (WeightedSummary, max_rounds,
+from repro.stream.weighted import (WeightedSummary, _bucket, max_rounds,
                                    resummarize, weighted_summary_outliers)
 
 
@@ -207,6 +207,32 @@ class StreamTree:
                     np.zeros((0,), np.float32), np.zeros((0,), bool))
         return (np.concatenate(pts), np.concatenate(wts),
                 np.concatenate(cand))
+
+    def packed_root(self, rows: int | None = None,
+                    include_buffer: bool = True):
+        """``root()`` padded to a static row count for collectives.
+
+        Returns ``(points (rows, d) f32, weights (rows,) f32,
+        valid (rows,) bool)`` with zero rows / zero weight / False beyond the
+        live records — exactly the (points, weights, valid) triple the
+        second-level ``kmeans_minus_minus`` consumes, and a fixed shape every
+        site can contribute to one ``all_gather``.  ``rows`` defaults to the
+        shared power-of-two bucket of the live record count (the same
+        bucketing the scoring path uses, so shapes — and therefore compiled
+        programs — are reused across refreshes).
+        """
+        pts, wts, _ = self.root(include_buffer)
+        s = pts.shape[0]
+        rows = _bucket(max(s, 1)) if rows is None else rows
+        if s > rows:
+            raise ValueError(f"{s} live records exceed packed capacity {rows}")
+        out_p = np.zeros((rows, self.cfg.dim), np.float32)
+        out_w = np.zeros((rows,), np.float32)
+        out_v = np.zeros((rows,), bool)
+        out_p[:s] = pts
+        out_w[:s] = wts
+        out_v[:s] = True
+        return out_p, out_w, out_v
 
     @property
     def total_weight(self) -> float:

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (distributed_cluster, local_budget, simulate_coordinator)
-from repro.core.metrics import clustering_losses, outlier_scores
+from repro.core.metrics import outlier_scores
 from repro.data.synthetic import gauss, partition
 
 

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo import analyze, parse_module
+from repro.launch.hlo import analyze
 from repro.optim import adamw
 from repro.optim.compression import (decode_bf16, decode_int8, encode_bf16,
                                      encode_int8, init_ef)

@@ -1,8 +1,6 @@
 """Per-arch smoke tests (reduced configs, CPU) + model-level correctness:
 decode-vs-train consistency, WKV chunk oracle, RG-LRU scan-vs-step, MoE
 dispatch semantics."""
-import functools
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -14,7 +12,7 @@ from repro.models.layers import ShardCtx
 from repro.models.rglru import rglru_block, rglru_layer_init
 from repro.models.rwkv6 import wkv_chunked, wkv_recurrent
 from repro.models.transformer import (forward_decode, forward_prefill,
-                                      forward_train, init_cache, init_params)
+                                      init_params)
 from repro.optim import adamw
 
 CTX = ShardCtx(mesh=None)
@@ -93,7 +91,6 @@ def test_decode_matches_teacher_forcing(arch):
 
 def _full_logits(params, batch, cfg):
     from repro.models.layers import rmsnorm, unembed
-    from repro.models.transformer import _embed_inputs
     # teacher-forcing logits via the training forward path internals
     import repro.models.transformer as T
     x, _ = T._embed_inputs(params, batch, cfg, CTX)
@@ -138,7 +135,7 @@ def _full_logits(params, batch, cfg):
 def _full_logits_encdec(params, batch, cfg):
     """Teacher-forcing decoder logits for the enc-dec family."""
     import repro.models.transformer as T
-    from repro.models.layers import kv_proj, rmsnorm, unembed, attention
+    from repro.models.layers import kv_proj, rmsnorm, unembed
     frames, tokens = batch["frames"], batch["tokens"]
     x_enc = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend"]["proj"]
     pos_e = jnp.arange(x_enc.shape[1], dtype=jnp.int32)

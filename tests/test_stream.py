@@ -104,7 +104,6 @@ def test_tree_ingest_order_weight_invariant():
 def test_tree_loss_within_constant_of_oneshot():
     """Quantization loss of the tree root vs one-shot Algorithm 1 loss."""
     x, _ = gauss(n_centers=8, per_center=500, t=40, sigma=0.1, seed=5)
-    n = x.shape[0]
     tree = StreamTree(TreeConfig(dim=5, k=8, t=40, leaf_size=512))
     tree.ingest(x)
     pts, _, _ = tree.root()
@@ -213,6 +212,52 @@ def test_service_submit_rejects_bad_dim(served):
         svc.submit(np.zeros((2, 3), np.float32))  # dim is 5
     # queue untouched: valid requests still serve
     assert len(svc.score(x[:4])) == 4
+
+
+def test_async_refresh_same_model_as_blocking():
+    """The fit is a pure function of (root snapshot, version, key): an async
+    refresh from the same boundary must produce the identical model."""
+    x = _mk(3000, 4, 30)
+    kw = dict(dim=4, k=5, t=15, leaf_size=512, refresh_every=10**6, seed=7)
+    sync = StreamService(ServiceConfig(**kw))
+    async_ = StreamService(ServiceConfig(**kw, async_refresh=True))
+    sync.ingest(x)
+    async_.ingest(x)
+    m_sync = sync.refresh()
+    async_.refresh(blocking=False)
+    assert async_.refresh_in_flight or async_.model is not None
+    async_.join_refresh()
+    m_async = async_.model
+    assert int(m_async.version) == int(m_sync.version) == 1
+    np.testing.assert_array_equal(np.asarray(m_sync.centers),
+                                  np.asarray(m_async.centers))
+    assert float(m_sync.threshold) == float(m_async.threshold)
+
+
+def test_async_refresh_cadence_coalesces_and_serves():
+    """Cadence refreshes under async_refresh must never block ingest, must
+    coalesce while one fit is in flight, and drain() must wait for the
+    first model instead of erroring."""
+    x = _mk(4096, 3, 31)
+    svc = StreamService(ServiceConfig(dim=3, k=4, t=10, leaf_size=256,
+                                      refresh_every=1024, seed=8,
+                                      async_refresh=True))
+    svc.ingest(x)          # 4 cadence boundaries -> >= 1 fit + coalesced rest
+    res = svc.score(x[:32])    # drain joins the first in-flight fit
+    assert len(res) == 32
+    svc.join_refresh()
+    assert int(svc.model.version) >= 1
+    assert not svc.refresh_in_flight
+    # a blocking refresh after the dust settles still works and bumps
+    v = int(svc.model.version)
+    assert int(svc.refresh().version) == v + 1
+
+
+def test_async_refresh_snapshot_error_raises_on_caller():
+    svc = StreamService(ServiceConfig(dim=3, k=4, t=10, leaf_size=256,
+                                      async_refresh=True))
+    with pytest.raises(RuntimeError, match="before any point"):
+        svc.refresh(blocking=False)   # snapshot happens on the caller
 
 
 def test_service_ingest_after_restore_with_smaller_cadence(tmp_path):

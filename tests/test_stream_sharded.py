@@ -1,0 +1,305 @@
+"""Multi-host sharded streaming service: per-site trees + all_gather roots.
+
+Coverage demanded by the subsystem's correctness argument (see
+repro/stream/sharded.py):
+  * the sharded refresh model reproduces the single-host tree's model on
+    the same interleaved stream (same centers / outlier decisions up to
+    permutation) while communicating only packed tree roots;
+  * the shard_map collective path is bit-identical to the host-simulated
+    gather (subprocess with forced multi-device CPU);
+  * communication accounting matches the payload actually gathered;
+  * globally-coherent outliers split across sites are still caught;
+  * per-site checkpoint state round-trips, and a checkpoint cannot be
+    silently restored onto a different site count;
+  * sliding-window drift: a windowed (sharded) service tracks the newest
+    concept phase, the full-stream one cannot.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import drifting_gauss
+from repro.stream import (ServiceConfig, ShardedServiceConfig,
+                          ShardedStreamService, StreamService)
+
+
+def _lattice_stream(seed=0, k=6, d=5, per=700, t=30):
+    """Well-separated clusters + scattered far outliers, shuffled into one
+    stream.  Separation is what makes "same centers up to permutation" a
+    well-posed assertion: both services must recover the true centers."""
+    rng = np.random.default_rng(seed)
+    true_c = np.eye(k, d) * 8.0 + np.arange(k)[:, None] * 0.5
+    x = np.repeat(true_c, per, axis=0) + rng.normal(0, 0.05, (k * per, d))
+    out = rng.uniform(-1, 1, (t, d))
+    out = out / np.linalg.norm(out, axis=1, keepdims=True) \
+        * rng.uniform(15, 25, (t, 1)) + 4.0
+    x = np.concatenate([x, out]).astype(np.float32)
+    order = rng.permutation(x.shape[0])
+    planted = np.nonzero(order >= k * per)[0]
+    return x[order], planted, true_c
+
+
+def _covers_true_centers(model, true_c, tol=0.5):
+    c = np.asarray(model.centers)
+    dist = np.linalg.norm(c[:, None] - true_c[None], axis=-1)
+    nearest = dist.argmin(1)
+    return (len(set(nearest)) == true_c.shape[0]
+            and float(dist.min(1).max()) < tol)
+
+
+# ------------------------------------------------- sharded == single host
+def test_sharded_matches_single_host_interleaved():
+    """Acceptance: s=4 sites on an interleaved stream reproduce the
+    single-host refresh model up to permutation, via roots only."""
+    x, planted, true_c = _lattice_stream(seed=0)
+    k, t, d = true_c.shape[0], planted.size, x.shape[1]
+    single = StreamService(ServiceConfig(
+        dim=d, k=k, t=t, leaf_size=512, refresh_every=2048, seed=3))
+    shard = ShardedStreamService(ShardedServiceConfig(
+        dim=d, k=k, t=t, n_sites=4, leaf_size=512, refresh_every=2048,
+        seed=3))
+    single.ingest(x)
+    shard.ingest(x)
+    m1, m2 = single.refresh(), shard.refresh()
+    np.testing.assert_allclose(shard.total_weight, x.shape[0], rtol=1e-6)
+    # same centers up to permutation: both cover the true centers
+    assert _covers_true_centers(m1, true_c)
+    assert _covers_true_centers(m2, true_c)
+    # same outlier set: identical decisions on planted outliers + inliers
+    inl = np.setdiff1d(np.arange(x.shape[0]), planted)[:200]
+    probes = np.concatenate([x[planted], x[inl]])
+    f1 = np.array([r.is_outlier for r in single.score(probes)])
+    f2 = np.array([r.is_outlier for r in shard.score(probes)])
+    assert f1[: planted.size].all() and f2[: planted.size].all()
+    np.testing.assert_array_equal(f1, f2)
+    # only tree roots were communicated, and they were accounted
+    st = shard.last_refresh
+    assert st is not None and st.comm_records == sum(st.per_site_records)
+    assert st.comm_records <= shard.num_records + 1  # roots, not raw points
+    assert st.comm_records < x.shape[0] // 4         # massively compressed
+
+
+def test_sharded_interleaving_is_unbiased_and_resumable():
+    x = np.random.default_rng(0).normal(size=(4099, 3)).astype(np.float32)
+    svc = ShardedStreamService(ShardedServiceConfig(
+        dim=3, k=4, t=8, n_sites=4, leaf_size=256, refresh_every=10**6))
+    # two calls; the round-robin cursor must continue across them
+    svc.ingest(x[:2050])
+    svc.ingest(x[2050:])
+    per_site = [tr.total_ingested for tr in svc.trees]
+    assert sum(per_site) == 4099
+    assert max(per_site) - min(per_site) <= 1      # even split
+    # explicit site pinning bypasses the router
+    svc.ingest(x[:7], site=2)
+    assert svc.trees[2].total_ingested == per_site[2] + 7
+    with pytest.raises(ValueError):
+        svc.ingest(x[:1], site=4)
+
+
+def test_sharded_comm_accounting_matches_payload():
+    x, _, _ = _lattice_stream(seed=0)
+    svc = ShardedStreamService(ShardedServiceConfig(
+        dim=x.shape[1], k=6, t=30, n_sites=4, leaf_size=512,
+        refresh_every=10**6))
+    svc.ingest(x)
+    svc.refresh()
+    st = svc.last_refresh
+    # per-record wire cost: d floats + weight + valid flag
+    rec_bytes = x.shape[1] * 4 + 4 + 1
+    assert st.payload_bytes == st.root_rows * rec_bytes
+    assert st.comm_bytes == 4 * st.payload_bytes
+    assert st.root_rows >= max(st.per_site_records)
+    assert st.path == "host-sim"
+    assert int(svc.model.version) == st.version
+
+
+def test_sharded_globally_split_outliers_still_caught():
+    """A thin far-away population spread evenly over all sites (each site
+    holds only a handful of its points) must still be flagged by the global
+    model — the coordinator property the single all_gather preserves."""
+    rng = np.random.default_rng(7)
+    k, d, per = 4, 4, 800
+    true_c = np.eye(k, d) * 6.0
+    x = np.repeat(true_c, per, axis=0) + rng.normal(0, 0.05, (k * per, d))
+    far = rng.uniform(-1, 1, (16, d))
+    far = far / np.linalg.norm(far, axis=1, keepdims=True) * 30.0
+    x = np.concatenate([x, far]).astype(np.float32)
+    order = rng.permutation(x.shape[0])
+    svc = ShardedStreamService(ShardedServiceConfig(
+        dim=d, k=k, t=20, n_sites=4, leaf_size=512, refresh_every=2048,
+        seed=1))
+    svc.ingest(x[order])   # round-robin: ~4 far points per site
+    svc.refresh()
+    res = svc.score(far.astype(np.float32))
+    assert all(r.is_outlier for r in res)
+    assert all(r.outlier_score > 10 for r in res)
+
+
+# ------------------------------------------------- shard_map collective
+_SHARD_MAP_EQ = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_DEFAULT_PRNG_IMPL"] = "threefry2x32"
+    import json
+    import numpy as np
+    from repro.data.synthetic import gauss
+    from repro.stream import ShardedServiceConfig, ShardedStreamService
+
+    x, _ = gauss(n_centers=6, per_center=400, t=24, sigma=0.05, seed=10)
+    kw = dict(dim=5, k=6, t=24, n_sites=4, leaf_size=256,
+              refresh_every=1024, seed=10)
+    host = ShardedStreamService(ShardedServiceConfig(**kw))
+    coll = ShardedStreamService(ShardedServiceConfig(**kw,
+                                                     use_shard_map=True))
+    host.ingest(x); coll.ingest(x)
+    mh, mc = host.refresh(), coll.refresh()
+    print(json.dumps({
+        "paths": [host.last_refresh.path, coll.last_refresh.path],
+        "centers_equal": bool(np.array_equal(np.asarray(mh.centers),
+                                             np.asarray(mc.centers))),
+        "threshold_equal": float(mh.threshold) == float(mc.threshold),
+        "cost_equal": float(mh.cost) == float(mc.cost),
+        "comm_bytes": [host.last_refresh.comm_bytes,
+                       coll.last_refresh.comm_bytes]}))
+""")
+
+
+@pytest.mark.slow
+def test_shard_map_refresh_bit_identical_to_host_sim_subprocess():
+    """Real 4-device shard_map gather == host-simulated gather, bitwise."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _SHARD_MAP_EQ],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["paths"] == ["host-sim", "shard_map"]
+    assert res["centers_equal"] and res["threshold_equal"] and res["cost_equal"]
+    assert res["comm_bytes"][0] == res["comm_bytes"][1] > 0
+
+
+# ------------------------------------------------- checkpointing
+def test_sharded_checkpoint_roundtrip_identical_scores(tmp_path):
+    x, planted, _ = _lattice_stream(seed=0)
+    cfg = ShardedServiceConfig(dim=x.shape[1], k=6, t=30, n_sites=4,
+                               leaf_size=512, refresh_every=2048, seed=3)
+    svc = ShardedStreamService(cfg)
+    svc.ingest(x)
+    svc.refresh()
+    q = x[:96]
+    before = svc.score(q)
+    svc.save(CheckpointManager(tmp_path), step=1)
+    restored = ShardedStreamService.restore(cfg, CheckpointManager(tmp_path))
+    after = restored.score(q)
+    for a, b in zip(before, after):
+        assert a.center == b.center
+        assert a.distance == b.distance          # bit-identical
+        assert a.outlier_score == b.outlier_score
+    # per-site trees and the routing cursor survived: further ingest stays
+    # deterministic and identically sharded
+    svc.ingest(x[:511])
+    restored.ingest(x[:511])
+    for t1, t2 in zip(svc.trees, restored.trees):
+        assert t1.total_ingested == t2.total_ingested
+        np.testing.assert_array_equal(t1.root()[0], t2.root()[0])
+
+
+def test_sharded_checkpoint_rejects_wrong_site_count(tmp_path):
+    x, _, _ = _lattice_stream(seed=0)
+    cfg = ShardedServiceConfig(dim=x.shape[1], k=6, t=30, n_sites=4,
+                               leaf_size=512, refresh_every=10**6)
+    svc = ShardedStreamService(cfg)
+    svc.ingest(x[:2048])
+    cm = CheckpointManager(tmp_path)
+    svc.save(cm, step=1)
+    assert cm.read_meta()["n_sites"] == 4
+    with pytest.raises(ValueError, match="4 sites"):
+        ShardedStreamService.restore(
+            ShardedServiceConfig(dim=x.shape[1], k=6, t=30, n_sites=2,
+                                 leaf_size=512), CheckpointManager(tmp_path))
+
+
+def test_checkpoint_format_guard_across_service_kinds(tmp_path):
+    """A single-host checkpoint must not restore into the sharded service
+    (and vice versa) — the meta format field catches it with a clear error
+    instead of a downstream treedef mismatch."""
+    x, _, _ = _lattice_stream(seed=0)
+    d = x.shape[1]
+    single = StreamService(ServiceConfig(dim=d, k=6, t=30, leaf_size=512,
+                                         refresh_every=10**6))
+    single.ingest(x[:1024])
+    single.save(CheckpointManager(tmp_path / "single"), step=1)
+    with pytest.raises(ValueError, match="format"):
+        ShardedStreamService.restore(
+            ShardedServiceConfig(dim=d, k=6, t=30, n_sites=4, leaf_size=512),
+            CheckpointManager(tmp_path / "single"))
+    sharded = ShardedStreamService(ShardedServiceConfig(
+        dim=d, k=6, t=30, n_sites=4, leaf_size=512, refresh_every=10**6))
+    sharded.ingest(x[:1024])
+    sharded.save(CheckpointManager(tmp_path / "sharded"), step=1)
+    with pytest.raises(ValueError, match="format"):
+        StreamService.restore(
+            ServiceConfig(dim=d, k=6, t=30, leaf_size=512),
+            CheckpointManager(tmp_path / "sharded"))
+
+
+# ------------------------------------------------- sliding-window drift
+def test_window_tracks_concept_shift_sharded():
+    """ROADMAP window-variance item: on a concept-shifting stream a
+    windowed service follows the newest phase; a full-stream service is
+    stuck splitting its centers across dead phases."""
+    x, phases, centers = drifting_gauss(n_phases=3, n_centers=4,
+                                        per_center=1200, d=4, drift=6.0,
+                                        seed=0)
+    phase_n = int((phases == 0).sum())
+    newest = centers[-1]                          # (4, d), box ~[12, 13]^d
+    kw = dict(dim=4, k=4, t=16, n_sites=4, leaf_size=256,
+              refresh_every=10**6, seed=1)
+    # half a phase: with eviction granularity W/4 the whole window is
+    # guaranteed to sit inside the newest phase
+    windowed = ShardedStreamService(ShardedServiceConfig(
+        **kw, window=phase_n // 2))
+    full = ShardedStreamService(ShardedServiceConfig(**kw))
+    windowed.ingest(x)
+    full.ingest(x)
+    mw, mf = windowed.refresh(), full.refresh()
+    cw, cf = np.asarray(mw.centers), np.asarray(mf.centers)
+    d_w = np.linalg.norm(cw[:, None] - newest[None], axis=-1).min(1)
+    d_f = np.linalg.norm(cf[:, None] - newest[None], axis=-1).min(1)
+    # every windowed center sits on a newest-phase cluster ...
+    assert float(d_w.max()) < 1.0, d_w
+    # ... while the full-stream model still spends centers on old phases
+    assert float(d_f.max()) > 4.0, d_f
+    # and the windowed model scores newest-phase traffic far better
+    probe = x[phases == 2][:512]
+    rw = windowed.score(probe)
+    assert np.mean([r.is_outlier for r in rw]) < 0.1
+
+
+def test_window_tracks_concept_shift_single_host():
+    """Same drift property for the single-host tree (the two services share
+    eviction semantics: global window W ~= per-site window W/s x s sites)."""
+    x, phases, centers = drifting_gauss(n_phases=2, n_centers=4,
+                                        per_center=1200, d=4, drift=6.0,
+                                        seed=1)
+    phase_n = int((phases == 0).sum())
+    newest = centers[-1]
+    kw = dict(dim=4, k=4, t=16, leaf_size=256, refresh_every=10**6, seed=1)
+    windowed = StreamService(ServiceConfig(**kw, window=phase_n // 2))
+    full = StreamService(ServiceConfig(**kw))
+    windowed.ingest(x)
+    full.ingest(x)
+    mw, mf = windowed.refresh(), full.refresh()
+    d_w = np.linalg.norm(np.asarray(mw.centers)[:, None] - newest[None],
+                         axis=-1).min(1)
+    d_f = np.linalg.norm(np.asarray(mf.centers)[:, None] - newest[None],
+                         axis=-1).min(1)
+    assert float(d_w.max()) < 1.0, d_w
+    assert float(d_f.max()) > 4.0, d_f
