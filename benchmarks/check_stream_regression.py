@@ -14,7 +14,17 @@ a PR cannot silently trade away streaming model quality:
   * ``sharded_comm_frac_max``   — gathered root records per refresh as a
                                   fraction of the stream length: the whole
                                   point of the paper is that communication
-                                  is sublinear in n.
+                                  is sublinear in n;
+  * ``kernels_min_pts_per_s``   — floor on every measured backend of the
+                                  ``"kernels"`` section (min_argmin /
+                                  lloyd_step through the dispatch
+                                  registry).  Set ~100x below healthy CPU
+                                  throughput: it catches catastrophic
+                                  dispatch regressions (e.g. auto
+                                  selection landing on Pallas interpret
+                                  mode), not machine-speed noise.  The
+                                  section itself is required — a bench run
+                                  without it fails the gate.
 
     PYTHONPATH=src python benchmarks/check_stream_regression.py \
         [--bench BENCH_stream.json] [--thresholds benchmarks/stream_thresholds.json]
@@ -38,7 +48,30 @@ def check(bench: dict, thr: dict) -> list[str]:
         if value > bound:
             failures.append(name)
 
+    def gate_min(name, value, bound):
+        tag = "ok  " if value >= bound else "FAIL"
+        print(f"{tag} {name}: {value:.1f} (min {bound})")
+        if value < bound:
+            failures.append(name)
+
     gate("cost_ratio", float(bench["cost_ratio"]), thr["cost_ratio_max"])
+    kb = bench.get("kernels")
+    if kb is None:
+        print("FAIL kernels: section missing from bench output")
+        failures.append("kernels_section")
+    else:
+        floor = thr["kernels_min_pts_per_s"]
+        for op, backends in kb["ops"].items():
+            measured = 0
+            for name, e in backends.items():
+                if "pts_per_s" not in e:
+                    continue
+                measured += 1
+                gate_min(f"kernels.{op}.{name}.pts_per_s",
+                         float(e["pts_per_s"]), floor)
+            if measured == 0:
+                print(f"FAIL kernels.{op}: no backend measured")
+                failures.append(f"kernels.{op}")
     sh = bench.get("sharded")
     if sh is not None:
         gate("sharded_cost_ratio", float(sh["cost_ratio"]),

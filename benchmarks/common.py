@@ -21,6 +21,11 @@ from repro.core.augmented import augmented_summary_compact
 from repro.core import (kmeans_minus_minus, kmeans_parallel_summary,
                         kmeanspp_summary, local_budget, rand_summary)
 from repro.core.metrics import clustering_losses, outlier_scores
+from repro.kernels.dispatch import KernelPolicy
+
+# one shared policy for the wall-clock benches: big blocked tiles (the
+# compact host loops stream dataset-sized n through min_argmin)
+_POLICY = KernelPolicy(block_n=65536)
 
 ALGOS = ("ball-grow", "k-means++", "k-means||", "rand")
 
@@ -39,12 +44,12 @@ class Row:
     t_second: float    # coordinator second-level seconds
 
 
-def _second_level(pts, wts, gids, k, t, key, block_n=65536):
+def _second_level(pts, wts, gids, k, t, key, policy=_POLICY):
     n = pts.shape[0]
     t0 = time.perf_counter()
     sol = kmeans_minus_minus(jnp.asarray(pts), jnp.asarray(wts),
                              jnp.ones((n,), bool), key, k=k, t=float(t),
-                             iters=25, block_n=block_n)
+                             iters=25, policy=policy)
     jax.block_until_ready(sol.centers)
     dt = time.perf_counter() - t0
     out = gids[np.asarray(sol.outlier)]
@@ -68,30 +73,30 @@ def run_algo(algo: str, parts, gids_parts, k: int, t: int, key,
             # exclude one-time jit compile from the paper's time comparison
             if algo == "k-means++":
                 jax.block_until_ready(kmeanspp_summary(
-                    xj, skey, budget=budget_per_site, block_n=65536).points)
+                    xj, skey, budget=budget_per_site, policy=_POLICY).points)
             elif algo == "k-means||":
                 jax.block_until_ready(kmeans_parallel_summary(
                     xj, skey, budget=budget_per_site, sites=sites_meta or s,
-                    block_n=65536).summary.points)
+                    policy=_POLICY).summary.points)
             else:
                 jax.block_until_ready(rand_summary(
-                    xj, skey, budget=budget_per_site, block_n=65536).points)
+                    xj, skey, budget=budget_per_site, policy=_POLICY).points)
             warmed = True
         t0 = time.perf_counter()
         if algo == "ball-grow":
             # host-compacted path: the paper's O(max{k,log n}*n + t*n) cost
             summ = augmented_summary_compact(part, skey, k=k, t=t_i,
-                                             block_n=65536)
+                                             policy=_POLICY)
         elif algo == "k-means++":
             summ = kmeanspp_summary(xj, skey, budget=budget_per_site,
-                                    block_n=65536)
+                                    policy=_POLICY)
         elif algo == "k-means||":
             res = kmeans_parallel_summary(xj, skey, budget=budget_per_site,
-                                          sites=sites_meta or s, block_n=65536)
+                                          sites=sites_meta or s, policy=_POLICY)
             summ = res.summary
             comm_extra += float(res.comm_records) / s  # multi-round overhead
         elif algo == "rand":
-            summ = rand_summary(xj, skey, budget=budget_per_site, block_n=65536)
+            summ = rand_summary(xj, skey, budget=budget_per_site, policy=_POLICY)
         else:
             raise ValueError(algo)
         jax.block_until_ready(summ.points)

@@ -2,12 +2,77 @@
 
 Reads artifacts/dryrun/*.json and prints, per (arch x shape x mesh):
 compute/memory/collective seconds, the dominant term, MODEL_FLOPS ratio.
+
+``--kernels`` instead annotates the ``"kernels"`` section that
+``benchmarks/stream_bench.py`` emits into ``BENCH_stream.json``: per
+measured (op, backend) it derives FLOPs and bytes-moved per call from the
+benchmark shape, writes achieved GFLOP/s, GB/s and arithmetic intensity
+back into the JSON, and prints the table — so a kernel regression shows up
+with its roofline context in the same artifact the CI gate reads.
 """
 from __future__ import annotations
 
 import argparse
 import json
 from pathlib import Path
+
+_BENCH_STREAM = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
+
+
+def _kernel_work(op: str, n: int, m: int, d: int) -> tuple[float, float]:
+    """(flops, bytes) per call of one fused op at (n, m, d), f32.
+
+    min_argmin: the l2 path is one (n,d)@(d,m) matmul plus the row
+    reductions; lloyd_step adds the one-hot accumulate matmul (same FLOP
+    count as the distance matmul).  Bytes model the streaming working set
+    (read x and c, write the (n,)-shaped outputs), not the distance matrix
+    — the whole point of the blocked/Pallas paths is that it never
+    materializes in HBM.
+    """
+    dist_flops = 2.0 * n * m * d + 4.0 * n * m
+    io_bytes = 4.0 * (n * d + m * d + 2 * n)
+    if op == "lloyd_step":
+        return dist_flops + 2.0 * n * m * d, io_bytes + 4.0 * (m * d + m)
+    return dist_flops, io_bytes
+
+
+def annotate_kernels(bench_path: Path = _BENCH_STREAM) -> dict:
+    """Fold roofline terms into BENCH_stream.json's "kernels" section."""
+    bench = json.loads(Path(bench_path).read_text())
+    kb = bench.get("kernels")
+    if not kb:
+        raise SystemExit(
+            f"{bench_path} has no 'kernels' section — run "
+            f"benchmarks/stream_bench.py first")
+    n, m, d = kb["n"], kb["m"], kb["d"]
+    for op, backends in kb["ops"].items():
+        flops, bts = _kernel_work(op, n, m, d)
+        for entry in backends.values():
+            if "us_per_call" not in entry:
+                continue
+            t = entry["us_per_call"] * 1e-6
+            entry["achieved_gflops"] = round(flops / t / 1e9, 2)
+            entry["achieved_gb_s"] = round(bts / t / 1e9, 3)
+            entry["ai_flops_per_byte"] = round(flops / bts, 2)
+    Path(bench_path).write_text(json.dumps(bench, indent=2) + "\n")
+    return kb
+
+
+def print_kernels(kb: dict) -> None:
+    hdr = (f"{'op/backend':28s} {'block_n':>8s} {'us':>10s} "
+           f"{'GFLOP/s':>9s} {'GB/s':>8s} {'AI':>6s}")
+    print(f"kernels @ n={kb['n']} m={kb['m']} d={kb['d']} "
+          f"({kb['metric']}, {kb['platform']})")
+    print(hdr)
+    print("-" * len(hdr))
+    for op, backends in kb["ops"].items():
+        for name, e in sorted(backends.items()):
+            if "us_per_call" not in e:
+                print(f"{op + '/' + name:28s} {'— ' + e['skipped']}")
+                continue
+            print(f"{op + '/' + name:28s} {e['block_n']:8d} "
+                  f"{e['us_per_call']:10.1f} {e['achieved_gflops']:9.2f} "
+                  f"{e['achieved_gb_s']:8.3f} {e['ai_flops_per_byte']:6.2f}")
 
 
 def load(art_dir="artifacts/dryrun", mesh="single"):
@@ -47,7 +112,13 @@ def main():
     ap.add_argument("--mesh", default="single",
                     choices=["single", "multi", "single-opt"])
     ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--kernels", action="store_true",
+                    help="annotate + print BENCH_stream.json's kernels section")
+    ap.add_argument("--bench", default=str(_BENCH_STREAM))
     args = ap.parse_args()
+    if args.kernels:
+        print_kernels(annotate_kernels(Path(args.bench)))
+        return
     rows = load(args.dir, args.mesh)
     print_table(rows)
     for d in rows:

@@ -17,10 +17,18 @@ gains a ``"sharded"`` section: per-site ingest throughput, refresh
 communication in records and bytes (the packed tree roots — the paper's
 one round), query latency and the sharded-vs-oneshot cost ratio.
 
+The result always carries a ``"kernels"`` section: per-backend
+``min_argmin`` / ``lloyd_step`` micro-benchmarks (through the
+``repro.kernels.dispatch`` registry, with the autotuner's chosen
+``block_n``), so the bench-smoke CI job can gate kernel-level regressions
+alongside the service-level ones.  ``benchmarks/roofline.py --kernels``
+annotates the same section with arithmetic-intensity/roofline terms.
+
 Emits ``BENCH_stream.json`` at the repo root so runs are comparable
 across PRs, and CSV lines via ``benchmarks/run.py --only stream``.
 
     PYTHONPATH=src:. python benchmarks/stream_bench.py [--scale 1.0] [--sites 4]
+        [--backend auto|pallas|blocked|ref]
 """
 from __future__ import annotations
 
@@ -35,6 +43,8 @@ import jax.numpy as jnp
 
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.data.synthetic import gauss
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
 from repro.kernels.pdist.ops import min_argmin
 from repro.stream import (ServiceConfig, ShardedServiceConfig,
                           ShardedStreamService, StreamService)
@@ -42,17 +52,17 @@ from repro.stream import (ServiceConfig, ShardedServiceConfig,
 _DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
 
 
-def model_cost(x, centers, t, block_n=65536) -> float:
+def model_cost(x, centers, t, policy=KernelPolicy(block_n=65536)) -> float:
     """(k,t)-means objective of ``centers`` on X: assign all, forgive the
     t farthest points (the outlier budget), sum the rest."""
     dist, _ = min_argmin(jnp.asarray(x), jnp.asarray(centers),
-                         metric="l2sq", block_n=block_n)
+                         metric="l2sq", policy=policy)
     dist = np.sort(np.asarray(dist))
     return float(dist[: max(dist.size - t, 1)].sum())
 
 
 def run_sharded(x, oneshot_cost: float, *, sites: int, k: int, t: int,
-                seed: int, use_pallas: bool) -> dict:
+                seed: int, policy: KernelPolicy) -> dict:
     """ShardedStreamService over the same stream: per-site ingest
     throughput, refresh comm (records/bytes of the gathered roots), query
     latency, quality vs the one-shot model."""
@@ -65,7 +75,7 @@ def run_sharded(x, oneshot_cost: float, *, sites: int, k: int, t: int,
         dim=d, k=k, t=t, n_sites=sites, leaf_size=leaf,
         refresh_every=max(n // 4, batch), micro_batch=256,
         site_budget="paper",   # round-robin routing is the dispatcher model
-        use_shard_map=len(jax.devices()) >= sites, use_pallas=use_pallas,
+        use_shard_map=len(jax.devices()) >= sites, policy=policy,
         seed=seed)
 
     warm = ShardedStreamService(cfg)               # compile outside the clock
@@ -125,7 +135,43 @@ def run_sharded(x, oneshot_cost: float, *, sites: int, k: int, t: int,
     }
 
 
-def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
+def kernel_bench(*, n: int = 32768, m: int = 64, d: int = 8,
+                 metric: str = "l2sq") -> dict:
+    """Per-backend min_argmin/lloyd_step micro-bench through the registry.
+
+    Shapes mirror the stream hot path (one leaf/root worth of rows against
+    a round's samples).  Each supported backend reports the autotuner's
+    chosen ``block_n`` and its throughput; backends that would not serve
+    this platform in production (Pallas interpret mode off-TPU) are
+    recorded as skipped rather than timed.
+    """
+    platform = jax.default_backend()
+    out = {"platform": platform, "n": n, "m": m, "d": d, "metric": metric,
+           "ops": {}}
+    for op in ("min_argmin", "lloyd_step"):
+        out["ops"][op] = {}
+        for name, reg in sorted(dispatch.registered_backends(op).items()):
+            if not reg.supports(metric, platform, np.float32, n, m, d):
+                out["ops"][op][name] = {"skipped": f"metric {metric} unsupported"}
+                continue
+            if name == "pallas" and platform != "tpu":
+                out["ops"][op][name] = {"skipped": "interpret-only off TPU"}
+                continue
+            bn = dispatch.autotune_block_n(op, name, metric=metric,
+                                           n=n, m=m, d=d)
+            t_s = dispatch.measure_block_ns(op, name, metric=metric,
+                                            n=n, m=m, d=d,
+                                            candidates=[bn])[bn]
+            out["ops"][op][name] = {
+                "block_n": int(bn),
+                "us_per_call": round(t_s * 1e6, 2),
+                "pts_per_s": round(n / t_s, 1),
+            }
+    return out
+
+
+def run(scale: float = 1.0, seed: int = 0,
+        policy: KernelPolicy = KernelPolicy(),
         sites: int = 0,
         out_path: Path | str | None = _DEFAULT_OUT) -> dict:
     k, d = 20, 5
@@ -137,7 +183,7 @@ def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
     batch = 4096
     cfg = ServiceConfig(dim=d, k=k, t=t, leaf_size=4096,
                         refresh_every=max(n // 4, batch), micro_batch=256,
-                        use_pallas=use_pallas, seed=seed)
+                        policy=policy, seed=seed)
 
     # --- warm the jit caches on a throwaway service: one full cadence
     # interval (same seed => same record counts => the same root bucket the
@@ -174,7 +220,7 @@ def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
     sol = kmeans_minus_minus(
         jnp.asarray(x), jnp.ones((n,)), jnp.ones((n,), bool),
         jax.random.key(seed + 2), k=k, t=float(t), iters=cfg.second_iters,
-        block_n=65536)
+        policy=KernelPolicy(block_n=65536))
     jax.block_until_ready(sol.centers)
     t_oneshot = time.perf_counter() - t0
 
@@ -195,10 +241,11 @@ def run(scale: float = 1.0, seed: int = 0, use_pallas: bool = False,
         "cost_ratio": stream_cost / max(oneshot_cost, 1e-12),
         "model_version": int(svc.model.version),
     }
+    result["kernels"] = kernel_bench()
     if sites > 0:
         result["sharded"] = run_sharded(
             x, oneshot_cost, sites=sites, k=k, t=t, seed=seed,
-            use_pallas=use_pallas)
+            policy=policy)
     if out_path is not None:
         Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
     return result
@@ -208,12 +255,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "blocked", "ref"],
+                    help="kernel backend for the whole service")
+    ap.add_argument("--autotune", action="store_true",
+                    help="autotune block_n per shape-bucket (cached on disk)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="deprecated: same as --backend pallas")
     ap.add_argument("--sites", type=int, default=0,
                     help="also run the sharded service over N sites")
     ap.add_argument("--out", default=str(_DEFAULT_OUT))
     args = ap.parse_args()
-    res = run(scale=args.scale, seed=args.seed, use_pallas=args.use_pallas,
+    backend = "pallas" if args.use_pallas else args.backend
+    res = run(scale=args.scale, seed=args.seed,
+              policy=KernelPolicy(backend=backend, autotune=args.autotune),
               sites=args.sites, out_path=args.out)
     print(f"n={res['n']} (k={res['k']}, t={res['t']})")
     print(f"ingest : {res['ingest_pts_per_s']:,.0f} pts/s "
@@ -225,6 +280,13 @@ def main() -> None:
           f"summary records vs one-shot {res['oneshot_s']:.2f}s on all points")
     print(f"quality: stream {res['stream_cost']:.4g} vs one-shot "
           f"{res['oneshot_cost']:.4g}  (ratio {res['cost_ratio']:.3f})")
+    kb = res["kernels"]
+    for op, backends in kb["ops"].items():
+        live = {b: e for b, e in backends.items() if "pts_per_s" in e}
+        print(f"kernels[{op}] @ (n={kb['n']}, m={kb['m']}, d={kb['d']}): " +
+              "  ".join(f"{b}: {e['pts_per_s']:,.0f} pts/s "
+                        f"(block_n={e['block_n']})"
+                        for b, e in live.items()))
     if "sharded" in res:
         sh = res["sharded"]
         print(f"sharded[{sh['sites']} sites, {sh['path']}]: "

@@ -10,11 +10,13 @@ still one pass of fused min-dist+argmin, i.e. one pdist kernel call.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.summary import Summary, summary_outliers, _plan
+from repro.core.summary import Summary, _plan, _summary_outliers
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
 from repro.kernels.pdist.ops import min_argmin
 
 _FAR = 1e30  # sentinel coordinate for invalid center slots
@@ -29,7 +31,7 @@ def augmented_summary_compact(
     alpha: float = 2.0,
     beta: float = 0.45,
     metric: str = "l2sq",
-    block_n: int = 65536,
+    policy: Optional[KernelPolicy] = None,
 ) -> "Summary":
     """Host-driven Algorithm 2 with the paper's O(t*n) cost: compact
     Algorithm 1 (O(max{k,log n}*n)), then one fused min-dist+argmin pass for
@@ -41,7 +43,7 @@ def augmented_summary_compact(
     n, d = x.shape
     key, k1, k2 = jax.random.split(jax.random.fold_in(key, 17), 3)
     base = summary_outliers_compact(x, k1, k=k, t=t, alpha=alpha, beta=beta,
-                                    metric=metric, block_n=block_n)
+                                    metric=metric, policy=policy)
     sel = np.asarray(base.indices)
     cand = np.asarray(base.is_candidate)
     cand_ids = sel[cand]
@@ -55,7 +57,7 @@ def augmented_summary_compact(
         center_ids = np.concatenate([center_ids, eligible[pick]])
     # Line 3: reassign everything outside X_r to nearest center in S u S'
     _, amin = min_argmin(jnp.asarray(x), jnp.asarray(x[center_ids]),
-                         metric=metric, block_n=block_n)
+                         metric=metric, policy=policy)
     pi = center_ids[np.asarray(amin)]
     pi[cand_ids] = cand_ids
     w = np.zeros(n, np.float32)
@@ -75,10 +77,6 @@ def augmented_summary_compact(
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "t", "alpha", "beta", "metric", "block_n", "use_pallas"),
-)
 def augmented_summary_outliers(
     x: jnp.ndarray,
     key: jax.Array,
@@ -88,14 +86,35 @@ def augmented_summary_outliers(
     alpha: float = 2.0,
     beta: float = 0.45,
     metric: str = "l2sq",
-    block_n: int = 16384,
-    use_pallas: bool = False,
+    policy: Optional[KernelPolicy] = None,
+    block_n: Optional[int] = None,      # deprecated alias
+    use_pallas: Optional[bool] = None,  # deprecated alias
+) -> Summary:
+    policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
+                            caller="augmented_summary_outliers")
+    return _augmented_summary_outliers(x, key, k=k, t=t, alpha=alpha,
+                                       beta=beta, metric=metric, policy=policy)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "t", "alpha", "beta", "metric", "policy"),
+)
+def _augmented_summary_outliers(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float,
+    beta: float,
+    metric: str,
+    policy: KernelPolicy,
 ) -> Summary:
     n, d = x.shape
     key, k1, k2 = jax.random.split(key, 3)
-    base = summary_outliers(
-        x, k1, k=k, t=t, alpha=alpha, beta=beta, metric=metric,
-        block_n=block_n, use_pallas=use_pallas,
+    base = _summary_outliers(
+        x, k1, k=k, t=t, alpha=alpha, beta=beta, metric=metric, policy=policy,
     )
     _, m, rounds, _ = _plan(n, k, t, alpha, beta)
 
@@ -130,8 +149,7 @@ def augmented_summary_outliers(
     c_pts = xp[c_idx]  # invalid slots sit at _FAR -> never nearest
 
     # Line 3: reassign every x in X \ X_r to its nearest center in S u S'.
-    _, amin = min_argmin(x, c_pts, metric=metric, block_n=block_n,
-                         use_pallas=use_pallas)
+    _, amin = min_argmin(x, c_pts, metric=metric, policy=policy)
     pi = jnp.where(cand_mask, jnp.arange(n, dtype=jnp.int32), c_idx[amin])
 
     # Line 4: weights under the new mapping.

@@ -31,6 +31,7 @@ from repro.core.augmented import augmented_summary_outliers
 from repro.core.collective import gather_sites, replicated_coordinator
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.core.summary import summary_outliers, summary_outliers_compact
+from repro.kernels.dispatch import KernelPolicy
 
 
 class DistClusterResult(NamedTuple):
@@ -48,9 +49,9 @@ def local_budget(t: int, s: int, partition: str) -> int:
     return max(1, int(math.ceil(2 * t / s)))
 
 
-def _second_level(points, weights, valid, gids, key, *, k, t, iters, metric, block_n):
+def _second_level(points, weights, valid, gids, key, *, k, t, iters, metric, policy):
     sol = kmeans_minus_minus(points, weights, valid, key, k=k, t=float(t),
-                             iters=iters, metric=metric, block_n=block_n)
+                             iters=iters, metric=metric, policy=policy)
     out_ids = jnp.where(sol.outlier, gids, -1)
     order = jnp.argsort(~sol.outlier)  # flagged first
     return sol, out_ids[order], order
@@ -68,7 +69,7 @@ def distributed_cluster(
     summary_alg: str = "augmented",
     second_iters: int = 25,
     metric: str = "l2sq",
-    block_n: int = 16384,
+    policy: KernelPolicy | None = None,
 ) -> DistClusterResult:
     """x_parts: (s, n_per, d), sharded over ``axis`` on the leading dim."""
     s, n_per, d = x_parts.shape
@@ -79,7 +80,7 @@ def distributed_cluster(
         x_local = xp[0]  # (n_per, d) — this site's block
         site = jax.lax.axis_index(axis)
         skey = jax.random.fold_in(key, site)
-        summ = summarize(x_local, skey, k=k, t=t_i, metric=metric, block_n=block_n)
+        summ = summarize(x_local, skey, k=k, t=t_i, metric=metric, policy=policy)
         gids = jnp.where(summ.valid, summ.indices + site * n_per, -1)
         # --- the one round of communication ---
         pts, wts, val, gid = gather_sites(
@@ -87,7 +88,7 @@ def distributed_cluster(
         # --- replicated second level at the "coordinator" ---
         sol, out_ids_sorted, _ = _second_level(
             pts, wts, val, gid, jax.random.fold_in(key, 2**31 - 1),
-            k=k, t=t, iters=second_iters, metric=metric, block_n=block_n)
+            k=k, t=t, iters=second_iters, metric=metric, policy=policy)
         comm = val.sum().astype(jnp.float32)
         return (sol.centers, out_ids_sorted, gid, wts, comm, sol.cost)
 
@@ -113,7 +114,7 @@ def simulate_coordinator(
     summary_alg: str = "augmented",
     second_iters: int = 25,
     metric: str = "l2sq",
-    block_n: int = 65536,
+    policy: KernelPolicy | None = None,
     compact: bool = True,
 ):
     """Host-side Algorithm 3 over a list of per-site arrays.
@@ -130,13 +131,13 @@ def simulate_coordinator(
         skey = jax.random.fold_in(key, i)
         if summary_alg == "augmented":
             summ = augmented_summary_outliers(jnp.asarray(part), skey, k=k, t=t_i,
-                                              metric=metric, block_n=block_n)
+                                              metric=metric, policy=policy)
         elif compact:
             summ = summary_outliers_compact(part, skey, k=k, t=t_i, metric=metric,
-                                            block_n=block_n)
+                                            policy=policy)
         else:
             summ = summary_outliers(jnp.asarray(part), skey, k=k, t=t_i,
-                                    metric=metric, block_n=block_n)
+                                    metric=metric, policy=policy)
         valid = np.asarray(summ.valid)
         all_pts.append(np.asarray(summ.points)[valid])
         all_w.append(np.asarray(summ.weights)[valid])
@@ -149,7 +150,7 @@ def simulate_coordinator(
     n_rec = pts.shape[0]
     sol = kmeans_minus_minus(pts, wts, jnp.ones((n_rec,), bool),
                              jax.random.fold_in(key, 2**31 - 1), k=k, t=float(t),
-                             iters=second_iters, metric=metric, block_n=block_n)
+                             iters=second_iters, metric=metric, policy=policy)
     out_mask = np.asarray(sol.outlier)
     return {
         "centers": np.asarray(sol.centers),

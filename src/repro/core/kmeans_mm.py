@@ -15,12 +15,14 @@ cumulative weight stays <= t.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.kmeans_pp import kmeanspp_seed
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
+from repro.kernels.lloyd.ops import accumulate_by_assignment, lloyd_step
 from repro.kernels.pdist.ops import min_argmin
 
 
@@ -41,7 +43,6 @@ def _mark_outliers(dist, w_eff, t):
     return jnp.zeros_like(out_sorted).at[order].set(out_sorted)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters", "metric", "block_n", "use_pallas"))
 def kmeans_minus_minus(
     points: jnp.ndarray,
     weights: jnp.ndarray,
@@ -52,8 +53,29 @@ def kmeans_minus_minus(
     t: float,
     iters: int = 25,
     metric: str = "l2sq",
-    block_n: int = 16384,
-    use_pallas: bool = False,
+    policy: Optional[KernelPolicy] = None,
+    block_n: Optional[int] = None,      # deprecated alias
+    use_pallas: Optional[bool] = None,  # deprecated alias
+) -> OutlierClustering:
+    policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
+                            caller="kmeans_minus_minus")
+    return _kmeans_minus_minus(points, weights, valid, key, k=k, t=t,
+                               iters=iters, metric=metric, policy=policy)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "iters", "metric", "policy"))
+def _kmeans_minus_minus(
+    points: jnp.ndarray,
+    weights: jnp.ndarray,
+    valid: jnp.ndarray,
+    key: jax.Array,
+    *,
+    k: int,
+    t: float,
+    iters: int,
+    metric: str,
+    policy: KernelPolicy,
 ) -> OutlierClustering:
     n, d = points.shape
     w = weights.astype(jnp.float32) * valid
@@ -61,29 +83,20 @@ def kmeans_minus_minus(
     centers0 = points[seed_idx]
 
     def step(centers, _):
-        if use_pallas and metric in ("l2sq", "l2"):
-            # fused assign + accumulate (Pallas lloyd kernel); the outlier
-            # mask still needs a second accumulate pass with corrected w.
-            from repro.kernels.lloyd.ops import lloyd_step
-            _, _, amin, dist = lloyd_step(points, w, centers, metric=metric,
-                                          use_pallas=True)
-        else:
-            dist, amin = min_argmin(points, centers, metric=metric, block_n=block_n)
+        # One registry-dispatched fused Lloyd step (assign + accumulate);
+        # the outlier mask then corrects the accumulators with a one-hot
+        # matmul over the inlier weights — no second distance pass.
+        _, _, amin, dist = lloyd_step(points, w, centers, metric=metric,
+                                      policy=policy)
         dist = jnp.where(valid, dist, -jnp.inf)   # padding: never an outlier
         out = _mark_outliers(dist, w, t)
         w_in = w * ~out
-        if use_pallas and metric in ("l2sq", "l2"):
-            from repro.kernels.lloyd.ops import lloyd_step
-            sums, cnts, _, _ = lloyd_step(points, w_in, centers, metric=metric,
-                                          use_pallas=True)
-        else:
-            sums = jnp.zeros((k, d), jnp.float32).at[amin].add(points * w_in[:, None])
-            cnts = jnp.zeros((k,), jnp.float32).at[amin].add(w_in)
+        sums, cnts = accumulate_by_assignment(points, w_in, amin, k)
         new_centers = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts, 1e-9)[:, None], centers)
         return new_centers, None
 
     centers, _ = jax.lax.scan(step, centers0, None, length=iters)
-    dist, amin = min_argmin(points, centers, metric=metric, block_n=block_n)
+    dist, amin = min_argmin(points, centers, metric=metric, policy=policy)
     dist = jnp.where(valid, dist, -jnp.inf)
     out = _mark_outliers(dist, w, t)
     cost = jnp.sum(jnp.where(valid & ~out, dist, 0.0) * w)

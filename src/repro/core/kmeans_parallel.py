@@ -18,12 +18,13 @@ deployment would incur:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.summary import Summary
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
 from repro.kernels.pdist.ops import min_argmin
 
 
@@ -33,7 +34,6 @@ class KmeansParallelResult(NamedTuple):
     rounds: int
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "rounds", "metric", "block_n", "sites"))
 def kmeans_parallel_summary(
     x: jnp.ndarray,
     key: jax.Array,
@@ -41,8 +41,26 @@ def kmeans_parallel_summary(
     budget: int,
     rounds: int = 5,
     metric: str = "l2sq",
-    block_n: int = 16384,
+    policy: Optional[KernelPolicy] = None,
     sites: int = 1,
+) -> KmeansParallelResult:
+    # resolve the process default eagerly: a jitted policy=None would freeze
+    # whatever default the first trace saw into the compile cache
+    policy = resolve_policy(policy)
+    return _kmeans_parallel_summary(x, key, budget=budget, rounds=rounds,
+                                    metric=metric, policy=policy, sites=sites)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "rounds", "metric", "policy", "sites"))
+def _kmeans_parallel_summary(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    budget: int,
+    rounds: int,
+    metric: str,
+    policy: KernelPolicy,
+    sites: int,
 ) -> KmeansParallelResult:
     n, d = x.shape
     ell = max(1, budget // rounds)
@@ -54,7 +72,7 @@ def kmeans_parallel_summary(
         score = jnp.where(score.sum() > 0, score, jnp.ones_like(score))
         logits = jnp.log(jnp.maximum(score, 1e-30))
         idx = jax.random.categorical(sk, logits, shape=(ell,)).astype(jnp.int32)
-        dists, _ = min_argmin(x, x[idx], metric=metric, block_n=block_n)
+        dists, _ = min_argmin(x, x[idx], metric=metric, policy=policy)
         mind = jnp.minimum(mind, dists)
         return (key, mind), idx
 
@@ -63,7 +81,7 @@ def kmeans_parallel_summary(
     idx = idx_rounds.reshape(-1)  # (rounds*ell,)
 
     centers = x[idx]
-    _, amin = min_argmin(x, centers, metric=metric, block_n=block_n)
+    _, amin = min_argmin(x, centers, metric=metric, policy=policy)
     counts = jnp.zeros((idx.shape[0],), jnp.float32).at[amin].add(1.0)
     summary = Summary(
         indices=idx,

@@ -13,11 +13,13 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.summary import Summary
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
 from repro.kernels.pdist.ops import min_argmin
 
 
@@ -71,21 +73,36 @@ def pp_budget(n: int, k: int, t: int) -> int:
     return int(k * max(1, math.ceil(math.log(max(n, 2)))) + t)
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "metric", "block_n"))
 def kmeanspp_summary(
     x: jnp.ndarray,
     key: jax.Array,
     *,
     budget: int,
     metric: str = "l2sq",
-    block_n: int = 16384,
+    policy: Optional[KernelPolicy] = None,
 ) -> Summary:
     """The `k-means++` baseline summary: budgeted seeding + nearest counts."""
+    # resolve the process default eagerly: a jitted policy=None would freeze
+    # whatever default the first trace saw into the compile cache
+    policy = resolve_policy(policy)
+    return _kmeanspp_summary(x, key, budget=budget, metric=metric,
+                             policy=policy)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "policy"))
+def _kmeanspp_summary(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    budget: int,
+    metric: str,
+    policy: KernelPolicy,
+) -> Summary:
     n, d = x.shape
     w1 = jnp.ones((n,), jnp.float32)
     idx, _ = kmeanspp_seed(x, w1, key, budget=budget, metric=metric)
     centers = x[idx]
-    _, amin = min_argmin(x, centers, metric=metric, block_n=block_n)
+    _, amin = min_argmin(x, centers, metric=metric, policy=policy)
     counts = jnp.zeros((budget,), jnp.float32).at[amin].add(1.0)
     sigma = idx[amin]
     return Summary(

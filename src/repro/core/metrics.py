@@ -10,10 +10,11 @@ Outlier detection, against ground truth O*:
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import KernelPolicy
 from repro.kernels.pdist.ops import min_argmin
 
 
@@ -23,9 +24,10 @@ class OutlierScores(NamedTuple):
     recall: float
 
 
-def clustering_losses(x, centers, outlier_mask_x, *, block_n: int = 65536):
+def clustering_losses(x, centers, outlier_mask_x, *,
+                      policy: Optional[KernelPolicy] = None):
     """(l1, l2) losses of centers over X \\ O.  outlier_mask_x is (n,) bool."""
-    d1, _ = min_argmin(x, centers, metric="l2", block_n=block_n)
+    d1, _ = min_argmin(x, centers, metric="l2", policy=policy)
     keep = ~outlier_mask_x
     l1 = jnp.where(keep, d1, 0.0).sum()
     l2 = jnp.where(keep, d1 * d1, 0.0).sum()

@@ -8,27 +8,43 @@ candidates, which is why it fails at outlier detection (paper Tables 2-4).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.summary import Summary
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
 from repro.kernels.pdist.ops import min_argmin
 
 
-@functools.partial(jax.jit, static_argnames=("budget", "metric", "block_n"))
 def rand_summary(
     x: jnp.ndarray,
     key: jax.Array,
     *,
     budget: int,
     metric: str = "l2sq",
-    block_n: int = 16384,
+    policy: Optional[KernelPolicy] = None,
+) -> Summary:
+    # resolve the process default eagerly: a jitted policy=None would freeze
+    # whatever default the first trace saw into the compile cache
+    policy = resolve_policy(policy)
+    return _rand_summary(x, key, budget=budget, metric=metric, policy=policy)
+
+
+@functools.partial(jax.jit, static_argnames=("budget", "metric", "policy"))
+def _rand_summary(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    budget: int,
+    metric: str,
+    policy: KernelPolicy,
 ) -> Summary:
     n, d = x.shape
     idx = jax.random.choice(key, n, (budget,), replace=False).astype(jnp.int32)
     centers = x[idx]
-    _, amin = min_argmin(x, centers, metric=metric, block_n=block_n)
+    _, amin = min_argmin(x, centers, metric=metric, policy=policy)
     counts = jnp.zeros((budget,), jnp.float32).at[amin].add(1.0)
     return Summary(
         indices=idx,

@@ -29,12 +29,13 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
 from repro.kernels.pdist.ops import min_argmin
 
 
@@ -80,10 +81,6 @@ def _plan(n: int, k: int, t: int, alpha: float, beta: float):
     return kappa, m, rounds, cap
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("k", "t", "alpha", "beta", "metric", "block_n", "use_pallas"),
-)
 def summary_outliers(
     x: jnp.ndarray,
     key: jax.Array,
@@ -93,10 +90,32 @@ def summary_outliers(
     alpha: float = 2.0,
     beta: float = 0.45,
     metric: str = "l2sq",
-    block_n: int = 16384,
-    use_pallas: bool = False,
+    policy: Optional[KernelPolicy] = None,
+    block_n: Optional[int] = None,      # deprecated alias
+    use_pallas: Optional[bool] = None,  # deprecated alias
 ) -> Summary:
     """Fixed-shape Summary-Outliers (Algorithm 1). jit/shard_map friendly."""
+    policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
+                            caller="summary_outliers")
+    return _summary_outliers(x, key, k=k, t=t, alpha=alpha, beta=beta,
+                             metric=metric, policy=policy)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "t", "alpha", "beta", "metric", "policy"),
+)
+def _summary_outliers(
+    x: jnp.ndarray,
+    key: jax.Array,
+    *,
+    k: int,
+    t: int,
+    alpha: float,
+    beta: float,
+    metric: str,
+    policy: KernelPolicy,
+) -> Summary:
     n, d = x.shape
     _, m, rounds, cap = _plan(n, k, t, alpha, beta)
     stop = 8 * t
@@ -113,8 +132,7 @@ def summary_outliers(
         idx = jax.random.categorical(sk, logits, shape=(m,))
         s = x[idx]
         # Line 7: nearest-sample distance for every remaining point.
-        mind, amin = min_argmin(x, s, metric=metric, block_n=block_n,
-                                use_pallas=use_pallas)
+        mind, amin = min_argmin(x, s, metric=metric, policy=policy)
         masked = jnp.where(active, mind, jnp.inf)
         # Line 8: smallest rho with |B(S_i, X_i, rho)| >= beta*|X_i|.
         cnt = active.sum()
@@ -173,7 +191,7 @@ def summary_outliers_compact(
     alpha: float = 2.0,
     beta: float = 0.45,
     metric: str = "l2sq",
-    block_n: int = 65536,
+    policy: Optional[KernelPolicy] = None,
 ) -> Summary:
     """Host-driven Summary-Outliers that compacts X_i between rounds.
 
@@ -196,7 +214,7 @@ def summary_outliers_compact(
         idx = remaining[pick]                          # global sample ids
         xi = x[remaining]
         mind, amin = (np.asarray(a) for a in
-                      min_argmin(xi, x[idx], metric=metric, block_n=block_n))
+                      min_argmin(xi, x[idx], metric=metric, policy=policy))
         kth = int(np.clip(np.ceil(beta * remaining.size), 1, remaining.size))
         rho = np.partition(mind, kth - 1)[kth - 1]
         captured = mind <= rho

@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (pdist / lloyd / wkv): each op ships a Pallas
+# TPU kernel, a chunked blocked path, and a pure-jnp reference oracle.
+# Backend selection is centralized in `dispatch` — see KernelPolicy.
+from repro.kernels.dispatch import (  # noqa: F401
+    KernelPolicy, get_default_policy, set_default_policy, using_policy,
+)

@@ -1,0 +1,396 @@
+"""Unified kernel-dispatch layer: backend registry + autotuned block sizes.
+
+Every compute hot-spot of the paper funnels through two ops — fused
+nearest-center distance (``min_argmin``, Algorithm 1's ball-growing) and the
+fused Lloyd step (``lloyd_step``, the coordinator's weighted k-means--).
+Each op has several implementations (Pallas TPU kernel, chunked blocked
+jnp, pure-jnp reference oracle) with different capabilities; historically
+every caller hand-threaded ``use_pallas: bool`` + ``block_n: int`` and
+re-implemented the same ``if use_pallas and metric in (...)`` dispatch
+inline.  This module replaces that plumbing with:
+
+* a **backend registry**: each implementation registers under a name
+  (``"pallas"``, ``"blocked"``, ``"ref"``) with a capability predicate over
+  (metric, platform, dtype, shape) and a platform-dependent auto-selection
+  priority;
+* one **``KernelPolicy``** frozen dataclass (backend, block_n, autotune) —
+  the single object threaded through the algorithm layers, or installed
+  process-wide with ``set_default_policy``.  ``backend="auto"`` picks the
+  best supported implementation for the current platform (Pallas on TPU,
+  blocked elsewhere) without the caller knowing;
+* an **autotuner** that benchmarks candidate ``block_n`` tile sizes per
+  (op, backend, metric, shape-bucket, platform) and caches the winner in a
+  JSON file under ``~/.cache/repro_kernels/`` (override the location with
+  ``$REPRO_KERNELS_CACHE``), so CPU blocked paths and TPU Pallas paths each
+  get measured tiles instead of one hard-coded constant.
+
+Resolution happens at trace time (shapes are concrete under ``jax.jit``),
+so a jitted caller taking ``policy`` as a static argument compiles exactly
+one registry decision per (shape, policy) — no runtime branching.
+
+Deprecated ``use_pallas=``/``block_n=`` keyword aliases at the public API
+edges route through :func:`resolve_policy`, which emits a single
+``DeprecationWarning`` and builds the equivalent policy.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import numpy as np
+
+BACKENDS = ("auto", "pallas", "blocked", "ref")
+
+OPS = ("min_argmin", "lloyd_step")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """The one kernel-selection object threaded through the algorithm layers.
+
+    backend   — "auto" (pick per platform/capability), or an explicit
+                registry name.  An explicit backend that cannot serve a
+                particular call (e.g. the Pallas lloyd kernel under the l1
+                metric) falls back to auto selection for that call, exactly
+                like the inline ``if use_pallas and metric in (...)``
+                branches it replaces.
+    block_n   — row-tile size; None means "backend default, or autotuned
+                when ``autotune`` is set".
+    autotune  — measure candidate block_n values for this op/shape-bucket
+                (cached on disk) instead of using the backend default.
+    """
+
+    backend: str = "auto"
+    block_n: Optional[int] = None
+    autotune: bool = False
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}")
+
+
+class Registration(NamedTuple):
+    """One backend implementation of one op."""
+
+    op: str
+    name: str
+    impl: Callable                 # op-specific signature, kw block_n
+    supports: Callable             # (metric, platform, dtype, n, m, d) -> bool
+    priority: Callable             # platform -> int; < 0 means never auto-picked
+    default_block_n: Callable      # platform -> int
+    tune_candidates: tuple         # candidate block_n values for the autotuner
+    make_args: Callable            # (n, m, d, rng) -> positional args for impl
+
+
+_REGISTRY: dict[str, dict[str, Registration]] = {}
+_default_policy = KernelPolicy()
+_registered = False
+
+
+def _ensure_registered() -> None:
+    """Import the op modules so their backends land in the registry."""
+    global _registered
+    if _registered:
+        return
+    _registered = True
+    from repro.kernels.lloyd import ops as _lloyd_ops   # noqa: F401
+    from repro.kernels.pdist import ops as _pdist_ops   # noqa: F401
+
+
+def register(
+    op: str,
+    name: str,
+    *,
+    supports: Callable,
+    priority: Callable,
+    default_block_n: Callable,
+    tune_candidates: Sequence[int] = (),
+    make_args: Callable = None,
+):
+    """Decorator: register ``fn`` as the ``name`` backend of ``op``."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}; expected one of {OPS}")
+
+    def deco(fn):
+        _REGISTRY.setdefault(op, {})[name] = Registration(
+            op=op, name=name, impl=fn, supports=supports, priority=priority,
+            default_block_n=default_block_n,
+            tune_candidates=tuple(tune_candidates),
+            make_args=make_args)
+        return fn
+
+    return deco
+
+
+def registered_backends(op: str) -> dict[str, Registration]:
+    _ensure_registered()
+    if op not in _REGISTRY:
+        raise ValueError(f"no backends registered for op {op!r}")
+    return _REGISTRY[op]
+
+
+# --------------------------------------------------------------- policy state
+def get_default_policy() -> KernelPolicy:
+    return _default_policy
+
+
+def set_default_policy(policy: KernelPolicy) -> KernelPolicy:
+    """Install ``policy`` process-wide; returns the previous default."""
+    global _default_policy
+    prev = _default_policy
+    _default_policy = policy
+    return prev
+
+
+@contextlib.contextmanager
+def using_policy(policy: KernelPolicy):
+    """Context manager: scoped :func:`set_default_policy`."""
+    prev = set_default_policy(policy)
+    try:
+        yield policy
+    finally:
+        set_default_policy(prev)
+
+
+def resolve_policy(
+    policy: Optional[KernelPolicy] = None,
+    *,
+    use_pallas: Optional[bool] = None,
+    block_n: Optional[int] = None,
+    caller: str = "",
+) -> KernelPolicy:
+    """Fold the deprecated ``use_pallas=``/``block_n=`` aliases into a policy.
+
+    With neither alias set, returns ``policy`` (or the process default).
+    With an alias set, emits one ``DeprecationWarning`` and builds the
+    equivalent policy: ``use_pallas=True`` -> backend "pallas",
+    ``use_pallas=False`` (or only ``block_n``) -> backend "blocked" — the
+    exact pre-registry semantics.
+    """
+    if use_pallas is None and block_n is None:
+        return policy if policy is not None else get_default_policy()
+    if policy is not None:
+        raise TypeError(
+            f"{caller or 'this function'} got both policy= and the "
+            f"deprecated use_pallas=/block_n= aliases; pass only policy=")
+    warnings.warn(
+        f"{caller or 'kernel op'}: use_pallas=/block_n= are deprecated; "
+        f"pass policy=KernelPolicy(backend=..., block_n=...) or call "
+        f"set_default_policy() once",
+        DeprecationWarning, stacklevel=3)
+    return KernelPolicy(backend="pallas" if use_pallas else "blocked",
+                        block_n=block_n)
+
+
+# ----------------------------------------------------------------- resolution
+def select_backend(
+    op: str,
+    policy: Optional[KernelPolicy] = None,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    dtype=np.float32,
+    platform: Optional[str] = None,
+) -> Registration:
+    """Pick the registration serving this call under ``policy``."""
+    policy = policy if policy is not None else get_default_policy()
+    platform = platform or jax.default_backend()
+    regs = registered_backends(op)
+    if policy.backend != "auto":
+        reg = regs.get(policy.backend)
+        if reg is None:
+            raise ValueError(
+                f"op {op!r} has no backend {policy.backend!r}; "
+                f"registered: {sorted(regs)}")
+        if reg.supports(metric, platform, dtype, n, m, d):
+            return reg
+        # Explicit-but-unsupported falls back to auto selection for this
+        # call (the old inline `if use_pallas and metric in (...)` shape).
+    candidates = [
+        r for r in regs.values()
+        if r.priority(platform) >= 0
+        and r.supports(metric, platform, dtype, n, m, d)
+    ]
+    if not candidates:
+        raise ValueError(
+            f"no backend of op {op!r} supports metric={metric!r} on "
+            f"platform {platform!r} for shape (n={n}, m={m}, d={d})")
+    return max(candidates, key=lambda r: r.priority(platform))
+
+
+def resolve(
+    op: str,
+    policy: Optional[KernelPolicy] = None,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    dtype=np.float32,
+    platform: Optional[str] = None,
+) -> tuple[Registration, int]:
+    """Registry lookup: (registration, block_n) for one concrete call."""
+    policy = policy if policy is not None else get_default_policy()
+    platform = platform or jax.default_backend()
+    reg = select_backend(op, policy, metric=metric, n=n, m=m, d=d,
+                         dtype=dtype, platform=platform)
+    bn = policy.block_n
+    if bn is None:
+        if policy.autotune and reg.tune_candidates:
+            bn = autotune_block_n(op, reg.name, metric=metric, n=n, m=m, d=d,
+                                  platform=platform)
+        else:
+            bn = reg.default_block_n(platform)
+    return reg, int(bn)
+
+
+# ------------------------------------------------------------------ autotuner
+_TUNE_VERSION = 1
+# Shapes at/above this row bucket share one measurement (bounds tuner cost).
+_MAX_MEASURE_ROWS = 1 << 17
+_tune_cache: Optional[dict] = None
+_tuning = False   # re-entrancy guard: the measurement itself calls resolve()
+
+
+def cache_dir() -> Path:
+    return Path(os.environ.get(
+        "REPRO_KERNELS_CACHE", "~/.cache/repro_kernels")).expanduser()
+
+
+def _cache_path() -> Path:
+    return cache_dir() / "autotune.json"
+
+
+def _bucket(v: int, lo: int = 1) -> int:
+    b = max(lo, 1)
+    while b < v:
+        b <<= 1
+    return b
+
+
+def _load_cache() -> dict:
+    global _tune_cache
+    if _tune_cache is None:
+        try:
+            _tune_cache = json.loads(_cache_path().read_text())
+        except (OSError, ValueError):
+            _tune_cache = {}
+    return _tune_cache
+
+
+def _store_cache(key: str, entry: dict) -> None:
+    cache = _load_cache()
+    cache[key] = entry
+    try:
+        cache_dir().mkdir(parents=True, exist_ok=True)
+        tmp = _cache_path().with_suffix(".tmp")
+        tmp.write_text(json.dumps(cache, indent=2, sort_keys=True) + "\n")
+        tmp.replace(_cache_path())
+    except OSError:
+        pass   # cache is an optimization; never fail the caller over it
+
+
+def clear_autotune_cache(*, on_disk: bool = False) -> None:
+    """Drop the in-memory autotune cache (and optionally the JSON file)."""
+    global _tune_cache
+    _tune_cache = None
+    if on_disk:
+        try:
+            _cache_path().unlink()
+        except OSError:
+            pass
+
+
+def _default_make_args(n: int, m: int, d: int, rng: np.random.Generator):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    c = rng.standard_normal((m, d)).astype(np.float32)
+    return (x, c)
+
+
+def measure_block_ns(
+    op: str,
+    backend: str,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    candidates: Optional[Sequence[int]] = None,
+    repeats: int = 3,
+) -> dict[int, float]:
+    """Time ``op``'s ``backend`` impl at each candidate block_n (seconds)."""
+    reg = registered_backends(op)[backend]
+    cands = list(candidates if candidates is not None else reg.tune_candidates)
+    if not cands:
+        cands = [reg.default_block_n(jax.default_backend())]
+    rng = np.random.default_rng(0)
+    make = reg.make_args or _default_make_args
+    args = make(n, m, d, rng)
+    timings: dict[int, float] = {}
+    for bn in cands:
+        out = reg.impl(*args, metric=metric, block_n=bn)   # compile + warm
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = reg.impl(*args, metric=metric, block_n=bn)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        timings[bn] = best
+    return timings
+
+
+def autotune_block_n(
+    op: str,
+    backend: str,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    platform: Optional[str] = None,
+    repeats: int = 3,
+) -> int:
+    """Best block_n for (op, backend, metric, shape-bucket, platform).
+
+    Cached in ``cache_dir()/autotune.json``; one measurement per bucket.
+    """
+    global _tuning
+    platform = platform or jax.default_backend()
+    reg = registered_backends(op)[backend]
+    if not reg.tune_candidates or _tuning:
+        return reg.default_block_n(platform)
+    bn_rows = min(_bucket(n), _MAX_MEASURE_ROWS)
+    bm, bd = _bucket(m), _bucket(d)
+    key = (f"v{_TUNE_VERSION}/{op}/{backend}/{platform}/{metric}/"
+           f"n{bn_rows}/m{bm}/d{bd}")
+    cache = _load_cache()
+    hit = cache.get(key)
+    if isinstance(hit, dict) and "block_n" in hit:
+        return int(hit["block_n"])
+    _tuning = True
+    try:
+        cands = sorted({min(c, bn_rows) for c in reg.tune_candidates})
+        timings = measure_block_ns(op, backend, metric=metric, n=bn_rows,
+                                   m=bm, d=bd, candidates=cands,
+                                   repeats=repeats)
+    finally:
+        _tuning = False
+    best = min(timings, key=timings.get)
+    _store_cache(key, {
+        "block_n": int(best),
+        "timings_us": {str(bn): round(t * 1e6, 2)
+                       for bn, t in timings.items()},
+        "measured_shape": [bn_rows, bm, bd],
+    })
+    return int(best)

@@ -1,27 +1,39 @@
 """Production entry point for fused min-distance + argmin.
 
-``min_argmin(x, c, metric=..., block_n=..., use_pallas=...)``
+``min_argmin(x, c, metric=..., policy=KernelPolicy(...))``
 
-Dispatches to:
-  * the Pallas TPU kernel (``kernel.py``) when requested / on TPU, or
-  * a chunked pure-jnp path that never materializes more than
+Dispatches through the backend registry (``repro.kernels.dispatch``):
+
+  * ``pallas``  — the TPU kernel (``kernel.py``); interpret mode off-TPU,
+  * ``blocked`` — a chunked pure-jnp path that never materializes more than
     ``block_n × m`` distances at once (the (n, m) matrix for the paper's
     datasets would be ~GBs; chunking keeps the working set cache-sized on
-    CPU and VMEM-sized on TPU).
+    CPU and VMEM-sized on TPU),
+  * ``ref``     — the oracle in ``ref.py`` (full (n, m) matrix).
 
-Both paths agree with ``ref.min_argmin_ref`` (tested in
-tests/test_kernels_pdist.py, incl. interpret=True kernel sweeps).
+``backend="auto"`` picks Pallas on TPU and blocked elsewhere; ``block_n``
+comes from the policy, the autotuner's measured tile, or the backend
+default.  All paths agree with ``ref.min_argmin_ref`` (tested in
+tests/test_kernels.py and tests/test_dispatch.py, incl. interpret=True
+kernel sweeps).
+
+The ``use_pallas=``/``block_n=`` keyword aliases are deprecated; they emit
+a ``DeprecationWarning`` and route through the same registry.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
 from . import ref as _ref
 
 _DEFAULT_BLOCK_N = 16384
+_TUNE_BLOCK_NS = (4096, 8192, 16384, 32768, 65536)
 
 
 def _block_min_argmin(xb: jnp.ndarray, c: jnp.ndarray, metric: str):
@@ -50,14 +62,18 @@ def _block_min_argmin(xb: jnp.ndarray, c: jnp.ndarray, metric: str):
     return _ref.min_argmin_ref(xb, c, metric)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block_n", "use_pallas"))
-def min_argmin(x: jnp.ndarray, c: jnp.ndarray, *, metric: str = "l2sq",
-               block_n: int = _DEFAULT_BLOCK_N, use_pallas: bool = False):
-    """For each row of ``x`` (n, d): distance to nearest row of ``c`` (m, d)
-    and its index. Returns (dist (n,), idx (n,) int32)."""
-    if use_pallas:
-        from . import kernel as _kernel  # deferred: pallas import is optional
-        return _kernel.min_argmin_pallas(x, c, metric=metric)
+@dispatch.register(
+    "min_argmin", "blocked",
+    supports=lambda metric, platform, dtype, n, m, d: metric in _ref.METRICS,
+    priority=lambda platform: 1,
+    default_block_n=lambda platform: _DEFAULT_BLOCK_N,
+    tune_candidates=_TUNE_BLOCK_NS,
+)
+@functools.partial(jax.jit, static_argnames=("metric", "block_n"))
+def min_argmin_blocked(x: jnp.ndarray, c: jnp.ndarray, *,
+                       metric: str = "l2sq",
+                       block_n: int = _DEFAULT_BLOCK_N):
+    """Chunked jnp path: at most ``block_n × m`` distances live at once."""
     n = x.shape[0]
     if n <= block_n:
         return _block_min_argmin(x, c, metric)
@@ -66,3 +82,54 @@ def min_argmin(x: jnp.ndarray, c: jnp.ndarray, *, metric: str = "l2sq",
     xs = xp.reshape(-1, block_n, x.shape[1])
     md, ai = jax.lax.map(lambda xb: _block_min_argmin(xb, c, metric), xs)
     return md.reshape(-1)[:n], ai.reshape(-1)[:n]
+
+
+@dispatch.register(
+    "min_argmin", "ref",
+    supports=lambda metric, platform, dtype, n, m, d: metric in _ref.METRICS,
+    priority=lambda platform: 0,
+    default_block_n=lambda platform: _DEFAULT_BLOCK_N,
+)
+@functools.partial(jax.jit, static_argnames=("metric", "block_n"))
+def min_argmin_reference(x: jnp.ndarray, c: jnp.ndarray, *,
+                         metric: str = "l2sq", block_n: int = 0):
+    """Oracle backend; materializes the full (n, m) matrix (block_n unused)."""
+    return _ref.min_argmin_ref(x, c, metric)
+
+
+@dispatch.register(
+    "min_argmin", "pallas",
+    supports=lambda metric, platform, dtype, n, m, d: metric in _ref.METRICS,
+    # interpret mode off-TPU is test-only: never auto-picked there
+    priority=lambda platform: 10 if platform == "tpu" else -1,
+    default_block_n=lambda platform: 512,
+    tune_candidates=(256, 512, 1024, 2048),
+)
+def min_argmin_pallas_backend(x: jnp.ndarray, c: jnp.ndarray, *,
+                              metric: str = "l2sq", block_n: int = 512):
+    from . import kernel as _kernel  # deferred: pallas import is optional
+    return _kernel.min_argmin_pallas(x, c, metric=metric, bn=block_n)
+
+
+def min_argmin(
+    x: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    metric: str = "l2sq",
+    policy: Optional[KernelPolicy] = None,
+    block_n: Optional[int] = None,      # deprecated alias
+    use_pallas: Optional[bool] = None,  # deprecated alias
+):
+    """For each row of ``x`` (n, d): distance to nearest row of ``c`` (m, d)
+    and its index. Returns (dist (n,), idx (n,) int32).
+
+    Backend/tile selection comes from ``policy`` (default: the process
+    policy, see ``dispatch.set_default_policy``).  Resolution happens at
+    trace time, so calls inside ``jax.jit`` cost nothing at runtime.
+    """
+    policy = dispatch.resolve_policy(policy, use_pallas=use_pallas,
+                                     block_n=block_n, caller="min_argmin")
+    n, d = x.shape
+    reg, bn = dispatch.resolve("min_argmin", policy, metric=metric,
+                               n=n, m=c.shape[0], d=d, dtype=x.dtype)
+    return reg.impl(x, c, metric=metric, block_n=bn)

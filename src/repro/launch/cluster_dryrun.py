@@ -15,7 +15,6 @@ on real mesh geometry.
       [--k 100] [--t 131072] [--d 32] [--multi]
 """
 import argparse
-import functools
 import json
 import time
 from pathlib import Path
@@ -25,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import distributed_cluster
+from repro.kernels.dispatch import KernelPolicy
 from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS, _jsonable
 from repro.launch.hlo import analyze as analyze_hlo
 
@@ -47,11 +47,12 @@ def main():
 
     def job(x, key):
         return distributed_cluster(x, key, mesh, k=args.k, t=args.t,
-                                   summary_alg="plain", block_n=16384)
+                                   summary_alg="plain",
+                                   policy=KernelPolicy(block_n=16384))
 
     t0 = time.time()
     lowered = jax.jit(job, in_shardings=(NamedSharding(mesh, P("sites")),
-                                         None)).lower(x_s, jax.random.key(0))
+                                         None)).lower(x_s, key_s)
     compiled = lowered.compile()
     t_compile = time.time() - t0
 

@@ -25,7 +25,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
@@ -226,7 +225,9 @@ def main():
                            "trace": traceback.format_exc()[-2000:]}
                 path.write_text(json.dumps(_jsonable(rec), indent=1))
                 st = rec["status"]
-                n_ok += st == "ok"; n_skip += st == "skipped"; n_fail += st == "fail"
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "fail"
                 msg = {"ok": f"compile {rec.get('compile_s')}s flops/chip {rec.get('hlo_flops', 0):.3g}",
                        "skipped": rec.get("reason", ""),
                        "fail": rec.get("error", "")[:200]}[st]

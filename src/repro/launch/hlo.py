@@ -31,7 +31,6 @@ The parser handles the stable HLO text format: computations headed by
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -5,10 +5,7 @@ builders serve single-device smoke tests (mesh=None).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.models.config import ModelConfig

@@ -2,13 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch <id> [--smoke] \
         [--steps N] [--mesh auto|single|multi] [--ckpt-dir DIR] \
-        [--curation] [--set key=value ...]
+        [--set key=value ...]
 
 On this container (1 CPU device) use --smoke for the reduced config; on a
 real slice the same entry point builds the production mesh, shards params
 with models/sharding.py, and runs the jit'd train step with async
 checkpointing, straggler monitoring, and (optionally) the paper's data
-curation in the loop.
+curation in the loop (see examples/train_curated_lm.py for the wired-up
+curation flow).
 """
 from __future__ import annotations
 
@@ -22,11 +23,10 @@ import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCH_IDS, get_config
-from repro.core.curation import CuratorConfig, DataCurator
 from repro.data.tokens import PipelineConfig, TokenPipeline
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_train_step
-from repro.models.sharding import batch_specs, param_specs
+from repro.models.sharding import param_specs
 from repro.models.transformer import init_params
 from repro.optim import adamw
 from repro.runtime.straggler import StragglerMonitor
@@ -42,7 +42,6 @@ def main():
     ap.add_argument("--mesh", default="auto", choices=["auto", "single", "multi"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
-    ap.add_argument("--curation", action="store_true")
     ap.add_argument("--set", action="append", default=[])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -83,8 +82,6 @@ def main():
                                         seed=args.seed))
     ckpt = CheckpointManager(args.ckpt_dir, keep_last=3)
     monitor = StragglerMonitor(n_sites=max(n_dev, 1))
-    curator = (DataCurator(n_sites=4, cfg=CuratorConfig()) if args.curation
-               else None)
 
     start = 0
     if ckpt.latest_step() is not None:

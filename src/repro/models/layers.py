@@ -13,7 +13,6 @@ runs in single-device smoke tests and in the 512-chip dry-run.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import Params, ShardCtx, dense_init, mlp, mlp_init
+from repro.models.layers import Params, ShardCtx, mlp, mlp_init
 
 
 def moe_init(key, cfg: ModelConfig, dtype) -> Params:

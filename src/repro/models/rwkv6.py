@@ -173,7 +173,8 @@ def rwkv_block(p: Params, x: jnp.ndarray, cfg: ModelConfig, ctx: ShardCtx,
         # Pallas chunk kernel (VMEM-resident intra tensors, custom VJP);
         # flatten (B, H) -> BH rows, per-row u
         from repro.kernels.wkv.ops import wkv_forward
-        fl = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+        def fl(a):
+            return a.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
         u_bh = jnp.tile(tm["u"].reshape(H, hd), (B, 1))
         o_f, s_f = wkv_forward(fl(r), fl(kk), fl(vv), fl(lw), u_bh,
                                state["s"].reshape(B * H, hd, hd),

@@ -10,7 +10,6 @@ Optimizer moments inherit the param specs verbatim (same shapes).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

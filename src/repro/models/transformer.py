@@ -19,16 +19,13 @@ projected and prepended (vlm / early fusion) or encoded (audio enc-dec).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.layers import (Params, ShardCtx, attention, dense_init,
                                  embed, embed_init, mlp, mlp_init, rmsnorm,
-                                 rmsnorm_init, rope, unembed)
+                                 rmsnorm_init, unembed)
 from repro.models.moe import moe_ffn, moe_init
 from repro.models.rglru import rglru_block, rglru_layer_init
 from repro.models.rwkv6 import rwkv_block, rwkv_layer_init
@@ -336,9 +333,11 @@ def forward_prefill(params: Params, batch: dict, cfg: ModelConfig, ctx: ShardCtx
                 for j in range(cfg.moe_every - 1):
                     lp = jax.tree.map(lambda a: a[j], gp["dense"])
                     x, k, v = one_layer(lp, x)
-                    kk.append(k); vv.append(v)
+                    kk.append(k)
+                    vv.append(v)
                 x, k, v = one_layer(gp["moe"], x)
-                kk.append(k); vv.append(v)
+                kk.append(k)
+                vv.append(v)
                 return x, (jnp.stack(kk), jnp.stack(vv))
             x, (ks, vs) = jax.lax.scan(_remat(body, cfg), x, params["layers"])
         cache = {"k": ks, "v": vs, "kpos": kpos, "pos": jnp.int32(S)}
@@ -477,7 +476,6 @@ def _decode_attn(p, xn, cfg, ctx, ck, cv, kpos, pos):
     """One-token attention against a ring-buffer cache slice (B,W,Hkv,hd).
     Returns (attn_out, new_ck, new_cv)."""
     from repro.models.layers import kv_proj
-    B = xn.shape[0]
     W = ck.shape[1]
     slot = pos % W
     k_new, v_new = kv_proj(p["attn"], xn, cfg, jnp.full((1,), pos, jnp.int32))

@@ -10,7 +10,6 @@ Adam's own EMA smoothing).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -47,7 +46,8 @@ def lr_schedule(c: AdamWConfig, step):
 
 def init(params, c: AdamWConfig) -> AdamWState:
     dt = jnp.dtype(c.state_dtype)
-    zeros = lambda p: jnp.zeros_like(p, dtype=dt)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=dt)
     return AdamWState(step=jnp.int32(0),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

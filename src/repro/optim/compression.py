@@ -53,7 +53,6 @@ def encode_int8(grads, ef: EFState):
         deq = q.astype(jnp.float32) * scale
         return (q, scale), gf - deq
     pairs = jax.tree.map(enc, grads, ef.residual)
-    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
     q = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
     r = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
     return q, EFState(r)

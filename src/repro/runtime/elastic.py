@@ -17,7 +17,6 @@ rescales), so the training trajectory stays comparable.
 from __future__ import annotations
 
 import math
-import time
 from dataclasses import dataclass, field
 from typing import Callable
 

@@ -14,11 +14,8 @@ no extra coordination round is needed.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.kmeans_mm import kmeans_minus_minus
 

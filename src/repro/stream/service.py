@@ -7,8 +7,8 @@ k-means-- (the paper's coordinator step) into a versioned ``ModelState``.
 
 Read path: ``submit`` enqueues assign/score requests; ``drain`` serves the
 queue in fixed-size micro-batches through one jitted scoring kernel
-(fused min-distance + argmin via ``repro.kernels.pdist``, Pallas-capable
-with ``use_pallas=True``).  Padding every micro-batch to the same static
+(fused min-distance + argmin via ``repro.kernels.pdist``; backend/tile
+selection via ``ServiceConfig.policy``).  Padding every micro-batch to the same static
 shape means exactly one compile per (batch, model) shape — the hot path
 never retraces.  Per-request latency (enqueue -> scored) is recorded for
 p50/p99 reporting.
@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.kmeans_mm import kmeans_minus_minus
+from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.kernels.pdist.ops import min_argmin
 from repro.stream.tree import StreamTree, TreeConfig
 
@@ -64,17 +65,21 @@ class ServiceConfig:
     micro_batch: int = 256           # static query-batch shape
     second_iters: int = 25
     metric: str = "l2sq"
-    block_n: int = 16384
-    use_pallas: bool = False
+    # None = capture the process default (set_default_policy) at construction
+    policy: Optional[KernelPolicy] = None
     window: Optional[int] = None
     async_refresh: bool = False      # fit cadence models off the ingest path
     seed: int = 0
 
+    def __post_init__(self):
+        if self.policy is None:
+            object.__setattr__(self, "policy", get_default_policy())
+
     def tree_config(self) -> TreeConfig:
         return TreeConfig(
             dim=self.dim, k=self.k, t=self.t, leaf_size=self.leaf_size,
-            metric=self.metric, block_n=self.block_n,
-            use_pallas=self.use_pallas, window=self.window, seed=self.seed)
+            metric=self.metric, policy=self.policy,
+            window=self.window, seed=self.seed)
 
 
 class ModelState(NamedTuple):
@@ -94,16 +99,15 @@ class QueryResult(NamedTuple):
     latency_s: float
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "block_n", "use_pallas"))
-def _score_batch(x, centers, threshold, *, metric, block_n, use_pallas):
-    dist, amin = min_argmin(x, centers, metric=metric, block_n=block_n,
-                            use_pallas=use_pallas)
+@functools.partial(jax.jit, static_argnames=("metric", "policy"))
+def _score_batch(x, centers, threshold, *, metric, policy):
+    dist, amin = min_argmin(x, centers, metric=metric, policy=policy)
     score = dist / jnp.maximum(threshold, 1e-30)
     return dist, amin, score
 
 
 def fit_model(pts, wts, valid, key, version, *, k, t, iters, metric,
-              block_n, use_pallas) -> ModelState:
+              policy) -> ModelState:
     """Second-level weighted k-means-- on a (padded) root -> ModelState.
 
     Pure function of its inputs — the one coordinator step every serving
@@ -111,7 +115,7 @@ def fit_model(pts, wts, valid, key, version, *, k, t, iters, metric,
     """
     sol = kmeans_minus_minus(
         pts, wts, valid, key, k=k, t=float(t), iters=iters, metric=metric,
-        block_n=block_n, use_pallas=use_pallas)
+        policy=policy)
     inlier = valid & ~sol.outlier
     threshold = jnp.where(inlier, sol.distances, -jnp.inf).max()
     threshold = jnp.maximum(threshold, 1e-12).astype(jnp.float32)
@@ -285,8 +289,7 @@ class ServingFrontEnd:
             xb[:take] = np.stack([b[1] for b in batch])
             dist, amin, score = _score_batch(
                 jnp.asarray(xb), self.model.centers, self.model.threshold,
-                metric=cfg.metric, block_n=cfg.block_n,
-                use_pallas=cfg.use_pallas)
+                metric=cfg.metric, policy=cfg.policy)
             jax.block_until_ready(dist)
             done = time.perf_counter()
             dist, amin, score = (np.asarray(a) for a in (dist, amin, score))
@@ -364,8 +367,7 @@ class StreamService(ServingFrontEnd):
         return functools.partial(
             fit_model, jnp.asarray(pts), jnp.asarray(wts), jnp.asarray(valid),
             key, version, k=cfg.k, t=cfg.t, iters=cfg.second_iters,
-            metric=cfg.metric, block_n=cfg.block_n,
-            use_pallas=cfg.use_pallas)
+            metric=cfg.metric, policy=cfg.policy)
 
     # ------------------------------------------------------------ checkpoint
     def _state(self) -> dict:

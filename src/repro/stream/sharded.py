@@ -56,6 +56,7 @@ from repro.core.collective import (gather_sites, gathered_bytes,
                                    payload_bytes, replicated_coordinator,
                                    sites_mesh)
 from repro.core.distributed import local_budget
+from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.stream.service import ModelState, ServingFrontEnd, fit_model
 from repro.stream.tree import StreamTree, TreeConfig
 from repro.stream.weighted import _bucket
@@ -72,14 +73,18 @@ class ShardedServiceConfig:
     micro_batch: int = 256
     second_iters: int = 25
     metric: str = "l2sq"
-    block_n: int = 16384
-    use_pallas: bool = False
+    # None = capture the process default (set_default_policy) at construction
+    policy: Optional[KernelPolicy] = None
     window: Optional[int] = None     # global raw points; split over sites
     site_budget: str = "full"        # "full": t per site (window/adversarial
     #                                  safe); "paper": 2t/s (cheaper roots)
     async_refresh: bool = False
     use_shard_map: bool = False      # real collective when devices allow
     seed: int = 0
+
+    def __post_init__(self):
+        if self.policy is None:
+            object.__setattr__(self, "policy", get_default_policy())
 
     def site_t(self) -> int:
         if self.site_budget == "full":
@@ -97,7 +102,7 @@ class ShardedServiceConfig:
         return TreeConfig(
             dim=self.dim, k=self.k, t=self.site_t(),
             leaf_size=self.leaf_size, metric=self.metric,
-            block_n=self.block_n, use_pallas=self.use_pallas, window=w,
+            policy=self.policy, window=w,
             seed=self.seed)
 
 
@@ -179,8 +184,7 @@ class ShardedStreamService(ServingFrontEnd):
                 gp, gw, gv = gather_sites((p[0], w[0], v[0]))
                 return fit_model(gp, gw, gv, key, version, k=cfg.k, t=cfg.t,
                                  iters=cfg.second_iters, metric=cfg.metric,
-                                 block_n=cfg.block_n,
-                                 use_pallas=cfg.use_pallas)
+                                 policy=cfg.policy)
 
             self._fit_program = replicated_coordinator(
                 per_site, sites_mesh(cfg.n_sites), n_sharded=1)
@@ -219,7 +223,7 @@ class ShardedStreamService(ServingFrontEnd):
                 jnp.asarray(wts.reshape(s * r)),
                 jnp.asarray(val.reshape(s * r)), key, version, k=cfg.k,
                 t=cfg.t, iters=cfg.second_iters, metric=cfg.metric,
-                block_n=cfg.block_n, use_pallas=cfg.use_pallas)
+                policy=cfg.policy)
 
         program = self._gathered_program()
         triple = (jnp.asarray(pts), jnp.asarray(wts), jnp.asarray(val))

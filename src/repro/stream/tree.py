@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.stream.weighted import (WeightedSummary, _bucket, max_rounds,
                                    resummarize, weighted_summary_outliers)
 
@@ -41,12 +42,16 @@ class TreeConfig:
     alpha: float = 2.0
     beta: float = 0.45
     metric: str = "l2sq"
-    block_n: int = 65536
-    use_pallas: bool = False
+    # None = capture the process default (set_default_policy) at construction
+    policy: Optional[KernelPolicy] = None
     window: Optional[int] = None     # raw points; None = full stream
     max_summaries: int = 64          # checkpoint slots; force-merge beyond
     max_points: int = 2 ** 34        # stream-length bound for the record cap
     seed: int = 0
+
+    def __post_init__(self):
+        if self.policy is None:
+            object.__setattr__(self, "policy", get_default_policy())
 
 
 def record_cap(cfg: TreeConfig) -> int:
@@ -121,8 +126,7 @@ class StreamTree:
         summ = weighted_summary_outliers(
             self._buf[:self._buf_n], self._buf_w[:self._buf_n],
             self._next_key(), k=cfg.k, t=cfg.t, alpha=cfg.alpha,
-            beta=cfg.beta, metric=cfg.metric, block_n=cfg.block_n,
-            use_pallas=cfg.use_pallas)
+            beta=cfg.beta, metric=cfg.metric, policy=cfg.policy)
         self._check_cap(summ)
         self.nodes.append(TreeNode(
             summary=summ, level=0, min_seq=self._flushed,
@@ -152,7 +156,7 @@ class StreamTree:
         summ = resummarize(
             [a.summary, b.summary], self._next_key(), k=cfg.k, t=cfg.t,
             alpha=cfg.alpha, beta=cfg.beta, metric=cfg.metric,
-            block_n=cfg.block_n, use_pallas=cfg.use_pallas)
+            policy=cfg.policy)
         self._check_cap(summ)
         self.nodes[i] = TreeNode(
             summary=summ, level=max(a.level, b.level) + 1,

@@ -26,20 +26,21 @@ representative).  That is the merge-and-reduce composition the stream tree
 (``repro.stream.tree``) relies on.
 
 Host-driven like ``summary_outliers_compact``: set logic in numpy, the
-distance inner loop stays jitted (``min_argmin``, Pallas-capable via
-``use_pallas``).  Stream leaves and merges are small (10^3..10^4 records),
+distance inner loop stays jitted (``min_argmin``, backend-selected via
+``KernelPolicy``).  Stream leaves and merges are small (10^3..10^4 records),
 so the host loop is never the bottleneck; the latency-critical query path
 in ``repro.stream.service`` is fully jitted.
 """
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import KernelPolicy, resolve_policy
 from repro.kernels.pdist.ops import min_argmin
 
 _FAR = 1e30  # sentinel coordinate for rows padded into a jit bucket
@@ -55,7 +56,7 @@ def _bucket(n: int, lo: int = 256) -> int:
 
 
 def _min_argmin_bucketed(xr: np.ndarray, c: np.ndarray, *, metric: str,
-                         block_n: int, use_pallas: bool):
+                         policy: Optional[KernelPolicy]):
     """min_argmin with the row count padded to a power-of-two bucket, so the
     jitted kernel compiles once per bucket instead of once per round (the
     remaining set shrinks every round and would otherwise retrace)."""
@@ -64,8 +65,7 @@ def _min_argmin_bucketed(xr: np.ndarray, c: np.ndarray, *, metric: str,
     if nb > nr:
         xr = np.concatenate(
             [xr, np.full((nb - nr, xr.shape[1]), _FAR, np.float32)])
-    mind, amin = min_argmin(xr, c, metric=metric, block_n=block_n,
-                            use_pallas=use_pallas)
+    mind, amin = min_argmin(xr, c, metric=metric, policy=policy)
     return np.asarray(mind)[:nr], np.asarray(amin)[:nr]
 
 
@@ -105,10 +105,13 @@ def weighted_summary_outliers(
     alpha: float = 2.0,
     beta: float = 0.45,
     metric: str = "l2sq",
-    block_n: int = 65536,
-    use_pallas: bool = False,
+    policy: Optional[KernelPolicy] = None,
+    block_n: Optional[int] = None,      # deprecated alias
+    use_pallas: Optional[bool] = None,  # deprecated alias
 ) -> WeightedSummary:
     """Weighted Summary-Outliers over records (points[i], weights[i])."""
+    policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
+                            caller="weighted_summary_outliers")
     x = np.asarray(points, np.float32)
     w = np.asarray(weights, np.float32).reshape(-1)
     if x.ndim != 2 or x.shape[0] != w.shape[0]:
@@ -145,8 +148,7 @@ def weighted_summary_outliers(
                                                  shape=(m,)))
         idx = remaining[pick]                 # global ids of this round's S_i
         mind, amin = _min_argmin_bucketed(x[remaining], x[idx], metric=metric,
-                                          block_n=block_n,
-                                          use_pallas=use_pallas)
+                                          policy=policy)
         # Line 8 (weighted): smallest rho capturing >= beta * W_i of mass.
         order = np.argsort(mind, kind="stable")
         cumw = np.cumsum(wr[order])
@@ -204,8 +206,7 @@ def resummarize(
     alpha: float = 2.0,
     beta: float = 0.45,
     metric: str = "l2sq",
-    block_n: int = 65536,
-    use_pallas: bool = False,
+    policy: Optional[KernelPolicy] = None,
 ) -> WeightedSummary:
     """The 'reduce' half: weighted Summary-Outliers on the merged union.
 
@@ -217,4 +218,4 @@ def resummarize(
         return merged
     return weighted_summary_outliers(
         merged.points, merged.weights, key, k=k, t=t, alpha=alpha, beta=beta,
-        metric=metric, block_n=block_n, use_pallas=use_pallas)
+        metric=metric, policy=policy)

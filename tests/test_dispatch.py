@@ -1,0 +1,308 @@
+"""Kernel-dispatch layer: backend registry, policy threading, autotuner.
+
+Parity contract (the acceptance bar for any new backend):
+  * ``blocked`` == ``ref`` EXACTLY (backend vs backend, both through the
+    registry) wherever the arithmetic order is preserved: the single-block
+    shortcut (any metric) and the l1 center-chunking path in
+    ``kernels/pdist/ops.py`` (pure adds, same order).  The tiled l2/l2sq
+    path reassociates the matmul (XLA tiles a (64, d) block differently
+    from the full array), so there the contract is distances within one
+    float ulp-scale tolerance and bit-equal argmins;
+  * ``pallas`` (interpret mode on CPU) matches ``ref`` within float
+    tolerance, with identical argmins away from ties.
+
+Plus: auto selection picks blocked off-TPU, explicit-but-unsupported
+backends fall back the way the old inline dispatch did, the process-wide
+default policy threads into jitted callers, the autotuner caches its
+measured ``block_n`` under ``$REPRO_KERNELS_CACHE``, and the deprecated
+``use_pallas=``/``block_n=`` aliases still work (with a
+``DeprecationWarning``) and route to the same registry path.
+"""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
+from repro.kernels.lloyd.ops import lloyd_step
+from repro.kernels.lloyd.ref import lloyd_step_ref
+from repro.kernels.pdist.ops import min_argmin
+from repro.kernels.pdist.ref import min_argmin_ref
+
+METRICS = ["l2sq", "l2", "l1"]
+# ragged on purpose: nothing divides the tile sizes; the 200-center cases
+# exercise the l1 center-chunking scan (mc=64) in the blocked path
+RAGGED_SHAPES = [(37, 3, 5), (257, 65, 11), (1001, 200, 18), (130, 129, 3)]
+
+
+def _data(n, m, d):
+    rng = np.random.default_rng(n * 7 + m * 3 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(n,)), jnp.float32)
+    return x, c, w
+
+
+# ------------------------------------------------------------ parity sweeps
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_min_argmin_blocked_single_block_equals_ref_exactly(shape, metric):
+    n, m, d = shape
+    x, c, _ = _data(n, m, d)
+    db, ab = min_argmin(x, c, metric=metric,
+                        policy=KernelPolicy(backend="blocked",
+                                            block_n=max(n, 16384)))
+    dr, ar = min_argmin(x, c, metric=metric,
+                        policy=KernelPolicy(backend="ref"))
+    assert (np.asarray(db) == np.asarray(dr)).all()
+    assert (np.asarray(ab) == np.asarray(ar)).all()
+    # and the registered ref backend IS the oracle
+    do, ao = min_argmin_ref(x, c, metric)
+    np.testing.assert_allclose(np.asarray(dr), np.asarray(do),
+                               rtol=1e-6, atol=1e-6)
+    assert (np.asarray(ar) == np.asarray(ao)).all()
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_min_argmin_blocked_chunked_equals_ref(shape, metric):
+    n, m, d = shape
+    x, c, _ = _data(n, m, d)
+    # block_n smaller than n: the chunked lax.map path, not the single-block
+    # shortcut; m > 64 cases also exercise the l1 center-chunking scan
+    db, ab = min_argmin(x, c, metric=metric,
+                        policy=KernelPolicy(backend="blocked", block_n=64))
+    dr, ar = min_argmin_ref(x, c, metric)
+    assert (np.asarray(ab) == np.asarray(ar)).all()
+    if metric == "l1":
+        # pure adds in the same order: tiling cannot change the bits
+        assert (np.asarray(db) == np.asarray(dr)).all()
+    else:
+        np.testing.assert_allclose(np.asarray(db), np.asarray(dr),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_min_argmin_pallas_interpret_close_to_ref(shape, metric):
+    n, m, d = shape
+    x, c, _ = _data(n, m, d)
+    dp, ap_ = min_argmin(x, c, metric=metric,
+                         policy=KernelPolicy(backend="pallas"))
+    dr, ar = min_argmin_ref(x, c, metric)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(ap_) == np.asarray(ar)).all()
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_lloyd_blocked_equals_ref(shape, metric):
+    n, m, d = shape
+    x, c, w = _data(n, m, d)
+    sb, cb, ab, db = lloyd_step(x, w, c, metric=metric,
+                                policy=KernelPolicy(backend="blocked",
+                                                    block_n=64))
+    sr, cr, ar, dr = lloyd_step_ref(x, w, c, metric)
+    assert (np.asarray(ab) == np.asarray(ar)).all()
+    if metric == "l1":
+        assert (np.asarray(db) == np.asarray(dr)).all()
+    else:
+        np.testing.assert_allclose(np.asarray(db), np.asarray(dr),
+                                   rtol=1e-5, atol=1e-5)
+    # accumulators: one-hot matmul vs scatter-add differ only in summation
+    # order
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(sr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cb), np.asarray(cr),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("metric", ["l2sq", "l2"])
+def test_lloyd_pallas_interpret_close_to_ref(metric):
+    x, c, w = _data(513, 37, 9)
+    sp, cp, ap_, dp = lloyd_step(x, w, c, metric=metric,
+                                 policy=KernelPolicy(backend="pallas"))
+    sr, cr, ar, dr = lloyd_step_ref(x, w, c, metric)
+    assert (np.asarray(ap_) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(cr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ registry rules
+def test_auto_selects_blocked_off_tpu():
+    assert jax.default_backend() != "tpu", "test assumes a CPU/GPU host"
+    for op in ("min_argmin", "lloyd_step"):
+        reg = dispatch.select_backend(op, KernelPolicy(), metric="l2sq",
+                                      n=100, m=10, d=4)
+        assert reg.name == "blocked"
+
+
+def test_auto_on_tpu_prefers_pallas():
+    reg = dispatch.select_backend("min_argmin", KernelPolicy(),
+                                  metric="l2sq", n=100, m=10, d=4,
+                                  platform="tpu")
+    assert reg.name == "pallas"
+    # ... but the lloyd kernel has no l1 path even on TPU
+    reg = dispatch.select_backend("lloyd_step", KernelPolicy(),
+                                  metric="l1", n=100, m=10, d=4,
+                                  platform="tpu")
+    assert reg.name == "blocked"
+
+
+def test_explicit_unsupported_backend_falls_back():
+    # the old `if use_pallas and metric in ("l2sq", "l2")` semantics: an l1
+    # lloyd call under an explicit pallas policy silently uses the best
+    # supported backend instead of erroring
+    reg = dispatch.select_backend("lloyd_step", KernelPolicy(backend="pallas"),
+                                  metric="l1", n=100, m=10, d=4)
+    assert reg.name == "blocked"
+    x, c, w = _data(64, 70, 5)   # m > 64: center-chunking path
+    s1, c1, a1, d1 = lloyd_step(x, w, c, metric="l1",
+                                policy=KernelPolicy(backend="pallas"))
+    sr, cr, ar, dr = lloyd_step_ref(x, w, c, "l1")
+    assert (np.asarray(a1) == np.asarray(ar)).all()
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="unknown backend"):
+        KernelPolicy(backend="cuda")
+
+
+def test_default_policy_threads_into_jitted_callers():
+    from repro.core.summary import summary_outliers
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(400, 4)), jnp.float32)
+    key = jax.random.key(3)
+    base = summary_outliers(x, key, k=4, t=6)
+    with dispatch.using_policy(KernelPolicy(backend="ref")):
+        via_default = summary_outliers(x, key, k=4, t=6)
+    # same sampling path, backend swap only: identical summaries
+    assert (np.asarray(base.indices) == np.asarray(via_default.indices)).all()
+    np.testing.assert_allclose(np.asarray(base.weights),
+                               np.asarray(via_default.weights))
+    # and the context manager restored the previous default
+    assert dispatch.get_default_policy() == KernelPolicy()
+
+
+def test_default_policy_not_frozen_by_jit_cache(monkeypatch):
+    """Jitted entry points must re-resolve the process default per call: a
+    policy=None static argument would freeze the first trace's backend into
+    the compile cache (regression test for exactly that bug)."""
+    from repro.core.rand_summary import rand_summary
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(128, 3)), jnp.float32)
+    key = jax.random.key(0)
+    rand_summary(x, key, budget=4)   # populate the jit cache under "blocked"
+
+    calls = []
+    regs = dispatch.registered_backends("min_argmin")
+    orig = regs["ref"]
+
+    def spy_impl(*args, **kw):
+        calls.append("ref")
+        return orig.impl(*args, **kw)
+
+    monkeypatch.setitem(regs, "ref", orig._replace(impl=spy_impl))
+    with dispatch.using_policy(KernelPolicy(backend="ref")):
+        rand_summary(x, key, budget=4)   # same shapes: would cache-hit if stale
+    assert calls, "default-policy switch ignored: jit cache served 'blocked'"
+
+
+def test_configs_capture_process_default_at_construction():
+    from repro.stream import ServiceConfig, ShardedServiceConfig, TreeConfig
+    tuned = KernelPolicy(backend="ref", block_n=123)
+    with dispatch.using_policy(tuned):
+        svc_cfg = ServiceConfig(dim=3, k=4, t=10)
+        sh_cfg = ShardedServiceConfig(dim=3, k=4, t=10, n_sites=2)
+        tr_cfg = TreeConfig(dim=3, k=4, t=10)
+    assert svc_cfg.policy == tuned
+    assert svc_cfg.tree_config().policy == tuned
+    assert sh_cfg.policy == tuned and sh_cfg.site_tree_config().policy == tuned
+    assert tr_cfg.policy == tuned
+    # an explicit policy always wins over the ambient default
+    with dispatch.using_policy(tuned):
+        explicit = ServiceConfig(dim=3, k=4, t=10,
+                                 policy=KernelPolicy(backend="blocked"))
+    assert explicit.policy == KernelPolicy(backend="blocked")
+
+
+# ------------------------------------------------------------ autotuner
+def test_autotune_writes_and_reuses_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS_CACHE", str(tmp_path))
+    dispatch.clear_autotune_cache()
+    try:
+        bn = dispatch.autotune_block_n("min_argmin", "blocked",
+                                       metric="l2sq", n=4096, m=16, d=4)
+        assert bn in (4096, 8192, 16384, 32768, 65536)
+        cache_file = tmp_path / "autotune.json"
+        assert cache_file.exists()
+        payload = json.loads(cache_file.read_text())
+        (key,) = payload.keys()
+        assert "min_argmin/blocked" in key
+        assert payload[key]["block_n"] == bn
+        assert payload[key]["timings_us"]
+        # second call (same shape bucket): served from cache, so poisoning
+        # the cached value must be reflected verbatim
+        payload[key]["block_n"] = 12345
+        cache_file.write_text(json.dumps(payload))
+        dispatch.clear_autotune_cache()
+        assert dispatch.autotune_block_n("min_argmin", "blocked",
+                                         metric="l2sq", n=4000, m=16,
+                                         d=4) == 12345
+    finally:
+        dispatch.clear_autotune_cache()
+
+
+def test_autotune_policy_resolves_block_n(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS_CACHE", str(tmp_path))
+    dispatch.clear_autotune_cache()
+    try:
+        # candidates above the shape bucket are clamped to it (no point
+        # tiling wider than the data), so only {4096, 8192} compete here
+        reg, bn = dispatch.resolve("min_argmin",
+                                   KernelPolicy(autotune=True),
+                                   metric="l2sq", n=5000, m=8, d=4)
+        assert reg.name == "blocked" and bn in (4096, 8192)
+        # an explicit block_n always wins over the tuner
+        _, bn2 = dispatch.resolve("min_argmin",
+                                  KernelPolicy(autotune=True, block_n=777),
+                                  metric="l2sq", n=5000, m=8, d=4)
+        assert bn2 == 777
+    finally:
+        dispatch.clear_autotune_cache()
+
+
+# ------------------------------------------------------------ deprecation
+def test_summary_outliers_use_pallas_alias_warns_and_matches_policy():
+    from repro.core.summary import summary_outliers
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(300, 3)), jnp.float32)
+    key = jax.random.key(11)
+    with pytest.warns(DeprecationWarning, match="use_pallas=/block_n="):
+        legacy = summary_outliers(x, key, k=3, t=5, use_pallas=True)
+    modern = summary_outliers(x, key, k=3, t=5,
+                              policy=KernelPolicy(backend="pallas"))
+    # same registry path, same key: bit-identical summaries
+    for a, b in zip(legacy, modern):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_block_n_alias_routes_to_blocked_backend():
+    x, c, _ = _data(500, 20, 6)
+    with pytest.warns(DeprecationWarning):
+        d1, a1 = min_argmin(x, c, block_n=128)
+    d2, a2 = min_argmin(x, c, policy=KernelPolicy(backend="blocked",
+                                                  block_n=128))
+    assert (np.asarray(d1) == np.asarray(d2)).all()
+    assert (np.asarray(a1) == np.asarray(a2)).all()
+
+
+def test_policy_plus_alias_is_an_error():
+    x, c, _ = _data(10, 2, 2)
+    with pytest.raises(TypeError, match="deprecated"):
+        min_argmin(x, c, policy=KernelPolicy(), block_n=64)

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.kernels.dispatch import KernelPolicy
 from repro.kernels.pdist.kernel import min_argmin_pallas
 from repro.kernels.pdist.ref import min_argmin_ref
 from repro.kernels.pdist.ops import min_argmin
@@ -56,7 +57,8 @@ def test_pdist_ops_chunked_equals_full():
     x = jnp.asarray(rng.normal(size=(1000, 9)), jnp.float32)
     c = jnp.asarray(rng.normal(size=(33, 9)), jnp.float32)
     for metric in METRICS:
-        d1, a1 = min_argmin(x, c, metric=metric, block_n=128)
+        d1, a1 = min_argmin(x, c, metric=metric,
+                            policy=KernelPolicy(backend="blocked", block_n=128))
         d2, a2 = min_argmin_ref(x, c, metric)
         np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-5, atol=1e-6)
         assert (np.asarray(a1) == np.asarray(a2)).all()

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 from repro.core import (kmeans_minus_minus, rand_summary, simulate_coordinator)
 from repro.core.metrics import clustering_losses, outlier_scores
+from repro.kernels.dispatch import KernelPolicy
 from repro.data.synthetic import gauss, partition
 
 
@@ -38,7 +39,8 @@ def test_end_to_end_distributed_clustering_with_outliers():
                               jnp.asarray(mask))
     sol = kmeans_minus_minus(jnp.asarray(x), jnp.ones((n,)),
                              jnp.ones((n,), bool), jax.random.key(1),
-                             k=k, t=float(t), block_n=65536)
+                             k=k, t=float(t),
+                             policy=KernelPolicy(block_n=65536))
     central_mask = np.asarray(sol.outlier)
     l1c, _ = clustering_losses(jnp.asarray(x), sol.centers,
                                jnp.asarray(central_mask))
