@@ -26,8 +26,25 @@ a PR cannot silently trade away streaming model quality:
                                   section itself is required — a bench run
                                   without it fails the gate.
 
+With any ``summarize_*`` key present the gate also reads
+``BENCH_summarize.json`` (benchmarks/summarizer_bench.py) and checks, per
+gated dataset (gauss / kdd_like):
+
+  * ``summarize_min_summarizers``     — at least this many registered
+                                        summarizers were compared;
+  * ``summarize_paper_min_recall``    — outlier-recall floor for the
+                                        ``paper`` summarizer;
+  * ``summarize_recall_margin_min``   — paper recall must beat the
+                                        ``uniform`` baseline's by at least
+                                        this margin at matched summary
+                                        size (the paper's Tables 2-4
+                                        claim, kept true under refactors);
+  * ``summarize_cosine_mass_err_max`` — relative mass-conservation error
+                                        of the cosine-metric section.
+
     PYTHONPATH=src python benchmarks/check_stream_regression.py \
-        [--bench BENCH_stream.json] [--thresholds benchmarks/stream_thresholds.json]
+        [--bench BENCH_stream.json] [--summarize-bench BENCH_summarize.json] \
+        [--thresholds benchmarks/stream_thresholds.json]
 """
 from __future__ import annotations
 
@@ -82,15 +99,72 @@ def check(bench: dict, thr: dict) -> list[str]:
     return failures
 
 
+_SUMMARIZE_DATASETS = ("gauss", "kdd_like")
+
+
+def check_summarize(bench: dict | None, thr: dict) -> list[str]:
+    """Gate BENCH_summarize.json under the ``summarize_*`` thresholds."""
+    failures: list[str] = []
+    if not any(key.startswith("summarize_") for key in thr):
+        return failures
+    if bench is None:
+        print("FAIL summarize: BENCH_summarize.json missing "
+              "(run benchmarks/summarizer_bench.py)")
+        return ["summarize_bench_missing"]
+
+    def gate_min(name, value, bound):
+        tag = "ok  " if value >= bound else "FAIL"
+        print(f"{tag} {name}: {value:.4f} (min {bound})")
+        if value < bound:
+            failures.append(name)
+
+    for ds in _SUMMARIZE_DATASETS:
+        summ = bench.get("datasets", {}).get(ds, {}).get("summarizers", {})
+        need = int(thr.get("summarize_min_summarizers", 0))
+        if len(summ) < need:
+            print(f"FAIL summarize.{ds}: {len(summ)} summarizers < {need}")
+            failures.append(f"summarize.{ds}.count")
+            continue
+        print(f"ok   summarize.{ds}: {len(summ)} summarizers compared")
+        if "summarize_paper_min_recall" in thr:
+            gate_min(f"summarize.{ds}.paper.recall",
+                     float(summ["paper"]["recall"]),
+                     thr["summarize_paper_min_recall"])
+        if "summarize_recall_margin_min" in thr:
+            margin = (float(summ["paper"]["recall"])
+                      - float(summ["uniform"]["recall"]))
+            gate_min(f"summarize.{ds}.paper_vs_uniform_recall_margin",
+                     margin, thr["summarize_recall_margin_min"])
+    if "summarize_cosine_mass_err_max" in thr:
+        cz = bench.get("cosine", {}).get("summarizers", {})
+        if not cz:
+            print("FAIL summarize.cosine: section missing")
+            failures.append("summarize.cosine")
+        for name, e in cz.items():
+            err = float(e["mass_err"])
+            bound = thr["summarize_cosine_mass_err_max"]
+            tag = "ok  " if err <= bound else "FAIL"
+            print(f"{tag} summarize.cosine.{name}.mass_err: "
+                  f"{err:.2e} (max {bound})")
+            if err > bound:
+                failures.append(f"summarize.cosine.{name}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default=str(_ROOT / "BENCH_stream.json"))
+    ap.add_argument("--summarize-bench",
+                    default=str(_ROOT / "BENCH_summarize.json"))
     ap.add_argument("--thresholds",
                     default=str(_ROOT / "benchmarks" / "stream_thresholds.json"))
     args = ap.parse_args()
     bench = json.loads(Path(args.bench).read_text())
     thr = json.loads(Path(args.thresholds).read_text())
-    failures = check(bench, thr)
+    sb_path = Path(args.summarize_bench)
+    summarize_bench = (json.loads(sb_path.read_text())
+                       if sb_path.exists() else None)
+    failures = check(bench, thr) + check_summarize(summarize_bench, thr)
     if failures:
         print(f"regression gate FAILED: {', '.join(failures)}",
               file=sys.stderr)

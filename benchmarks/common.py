@@ -22,6 +22,7 @@ from repro.core import (kmeans_minus_minus, kmeans_parallel_summary,
                         kmeanspp_summary, local_budget, rand_summary)
 from repro.core.metrics import clustering_losses, outlier_scores
 from repro.kernels.dispatch import KernelPolicy
+from repro.summarize import SummarizerPolicy, get_summarizer, summarize
 
 # one shared policy for the wall-clock benches: big blocked tiles (the
 # compact host loops stream dataset-sized n through min_argmin)
@@ -113,6 +114,22 @@ def run_algo(algo: str, parts, gids_parts, k: int, t: int, key,
     return pts, wts, gid, float(np.median(t_sites)), float(len(gid)) + comm_extra
 
 
+def _score_union(name, x, out_ids, pts, wts, gid, k, t, key, *,
+                 comm, t_summary) -> Row:
+    """Shared scoring tail: second level on the gathered union + the
+    paper's Section 5 metrics — one protocol for the paper-table algos and
+    the summarizer registry, so the two benches stay comparable."""
+    centers, reported, t_second = _second_level(pts, wts, gid, k, t, key)
+    sc = outlier_scores(out_ids, gid, reported)
+    mask = np.zeros(x.shape[0], bool)
+    mask[reported] = True
+    l1, l2 = clustering_losses(jnp.asarray(x), jnp.asarray(centers),
+                               jnp.asarray(mask), policy=_POLICY)
+    return Row(algo=name, summary=len(gid), l1=float(l1), l2=float(l2),
+               pre_rec=sc.pre_recall, prec=sc.precision, recall=sc.recall,
+               comm=comm, t_summary=t_summary, t_second=t_second)
+
+
 def evaluate(x, out_ids, parts, gids_parts, k, t, *, seed=0,
              algos=ALGOS) -> list[Row]:
     key = jax.random.key(seed)
@@ -123,17 +140,70 @@ def evaluate(x, out_ids, parts, gids_parts, k, t, *, seed=0,
             algo, parts, gids_parts, k, t, key, budget_per_site=budget)
         if algo == "ball-grow":  # size-match the baselines to ball-grow
             budget = max(1, int(math.ceil(len(gid) / len(parts))))
-        centers, reported, t_second = _second_level(
-            pts, wts, gid, k, t, jax.random.fold_in(key, 999))
-        sc = outlier_scores(out_ids, gid, reported)
-        mask = np.zeros(x.shape[0], bool)
-        mask[reported] = True
-        l1, l2 = clustering_losses(jnp.asarray(x), jnp.asarray(centers),
-                                   jnp.asarray(mask))
-        rows.append(Row(algo=algo, summary=len(gid), l1=float(l1), l2=float(l2),
-                        pre_rec=sc.pre_recall, prec=sc.precision,
-                        recall=sc.recall, comm=comm, t_summary=t_sum,
-                        t_second=t_second))
+        rows.append(_score_union(algo, x, out_ids, pts, wts, gid, k, t,
+                                 jax.random.fold_in(key, 999),
+                                 comm=comm, t_summary=t_sum))
+    return rows
+
+
+def run_summarizer(policy: SummarizerPolicy, parts, gids_parts, k: int, t: int,
+                   key, *, metric: str = "l2sq", kernel_policy=_POLICY):
+    """Per-site summaries through the ``repro.summarize`` registry.
+
+    Every registered summarizer runs through its weighted entry point with
+    unit weights (the host-driven coordinator model), so host-only
+    algorithms (ball_cover, coreset) benchmark on equal footing with the
+    paper's.  Returns (pts, wts, gid, t_summary_median, comm_records).
+    """
+    s = len(parts)
+    t_i = local_budget(t, s, "random")
+    all_pts, all_w, all_gid = [], [], []
+    t_sites = []
+    for i, part in enumerate(parts):
+        skey = jax.random.fold_in(key, i)
+        w1 = np.ones((part.shape[0],), np.float32)
+        if i == 0:   # exclude the one-time jit compile from the site clock
+            summarize(part, w1, skey, k=k, t=t_i, metric=metric,
+                      policy=policy, kernel_policy=kernel_policy)
+        t0 = time.perf_counter()
+        summ = summarize(part, w1, skey, k=k, t=t_i, metric=metric,
+                         policy=policy, kernel_policy=kernel_policy)
+        t_sites.append(time.perf_counter() - t0)
+        all_pts.append(np.asarray(summ.points))
+        all_w.append(np.asarray(summ.weights))
+        all_gid.append(gids_parts[i][np.asarray(summ.indices)])
+    pts = np.concatenate(all_pts)
+    wts = np.concatenate(all_w)
+    gid = np.concatenate(all_gid)
+    return pts, wts, gid, float(np.median(t_sites)), float(len(gid))
+
+
+def evaluate_summarizers(x, out_ids, parts, gids_parts, k, t, policies,
+                         *, metric: str = "l2sq", seed: int = 0,
+                         match_to: str | None = "paper") -> list[Row]:
+    """Head-to-head over summarizer policies: one :class:`Row` each.
+
+    ``match_to`` names the policy whose summary size budgets the others
+    (budget-accepting summarizers get ``budget=ceil(size / sites)`` unless
+    their params already pin one), so the comparison is at matched
+    communication — the paper's Tables 2–4 protocol.
+    """
+    key = jax.random.key(seed)
+    rows: list[Row] = []
+    budget = None
+    ordered = sorted(policies, key=lambda p: (p.name != match_to))
+    for pol in ordered:
+        if (budget is not None and pol.name != match_to
+                and get_summarizer(pol.name).sized
+                and "budget" not in pol.params_dict()):
+            pol = pol.with_params(budget=budget)
+        pts, wts, gid, t_sum, comm = run_summarizer(
+            pol, parts, gids_parts, k, t, key, metric=metric)
+        if pol.name == match_to and budget is None:
+            budget = max(1, int(math.ceil(len(gid) / len(parts))))
+        rows.append(_score_union(pol.name, x, out_ids, pts, wts, gid, k, t,
+                                 jax.random.fold_in(key, 999),
+                                 comm=comm, t_summary=t_sum))
     return rows
 
 

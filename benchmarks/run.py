@@ -15,7 +15,8 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=None,
                     help="dataset scale override (default: per-bench scaled)")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,table4,fig1,roofline,stream")
+                    help="comma list: table2,table3,table4,fig1,roofline,"
+                         "stream,summarize")
     ap.add_argument("--sites", type=int, default=0,
                     help="stream bench: also run the sharded service over N sites")
     args = ap.parse_args()
@@ -80,6 +81,17 @@ def main() -> None:
                 f"comm_records={sh['refresh_comm_records']};"
                 f"p99_ms={sh['query_p99_ms']:.3f};"
                 f"cost_ratio={sh['cost_ratio']:.3f}")
+
+    if want("summarize"):
+        from benchmarks.summarizer_bench import run as sm
+        res = sm(scale=args.scale or 0.3, sites=args.sites or 4)
+        for ds, entry in res["datasets"].items():
+            for name, e in entry["summarizers"].items():
+                csv.append(f"summarize/{ds}/{name},"
+                           f"{e['t_summary_s'] * 1e6:.0f},"
+                           f"recall={e['recall']:.4f};"
+                           f"l2_ratio={e['l2_ratio']:.4f};"
+                           f"summary={e['summary']}")
 
     if want("roofline"):
         from benchmarks.roofline import load, print_table

@@ -52,9 +52,10 @@ from repro.stream import (ServiceConfig, ShardedServiceConfig,
 _DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
 
 
-def model_cost(x, centers, t, policy=KernelPolicy(block_n=65536)) -> float:
+def model_cost(x, centers, t, policy=None) -> float:
     """(k,t)-means objective of ``centers`` on X: assign all, forgive the
-    t farthest points (the outlier budget), sum the rest."""
+    t farthest points (the outlier budget), sum the rest.  ``policy=None``
+    uses the process-default kernel policy."""
     dist, _ = min_argmin(jnp.asarray(x), jnp.asarray(centers),
                          metric="l2sq", policy=policy)
     dist = np.sort(np.asarray(dist))
@@ -219,8 +220,7 @@ def run(scale: float = 1.0, seed: int = 0,
     t0 = time.perf_counter()
     sol = kmeans_minus_minus(
         jnp.asarray(x), jnp.ones((n,)), jnp.ones((n,), bool),
-        jax.random.key(seed + 2), k=k, t=float(t), iters=cfg.second_iters,
-        policy=KernelPolicy(block_n=65536))
+        jax.random.key(seed + 2), k=k, t=float(t), iters=cfg.second_iters)
     jax.block_until_ready(sol.centers)
     t_oneshot = time.perf_counter() - t0
 
@@ -260,15 +260,12 @@ def main() -> None:
                     help="kernel backend for the whole service")
     ap.add_argument("--autotune", action="store_true",
                     help="autotune block_n per shape-bucket (cached on disk)")
-    ap.add_argument("--use-pallas", action="store_true",
-                    help="deprecated: same as --backend pallas")
     ap.add_argument("--sites", type=int, default=0,
                     help="also run the sharded service over N sites")
     ap.add_argument("--out", default=str(_DEFAULT_OUT))
     args = ap.parse_args()
-    backend = "pallas" if args.use_pallas else args.backend
     res = run(scale=args.scale, seed=args.seed,
-              policy=KernelPolicy(backend=backend, autotune=args.autotune),
+              policy=KernelPolicy(backend=args.backend, autotune=args.autotune),
               sites=args.sites, out_path=args.out)
     print(f"n={res['n']} (k={res['k']}, t={res['t']})")
     print(f"ingest : {res['ingest_pts_per_s']:,.0f} pts/s "

@@ -1,0 +1,160 @@
+"""Summarizer head-to-head: every registered summary algorithm on the
+paper's workloads, at matched summary size.
+
+For each dataset (gauss / kdd-like / susy-like, scaled for one CPU core;
+``--scale`` restores paper-scale sizes) the data is partitioned over
+``--sites`` sites and each registered summarizer builds per-site summaries
+through the ``repro.summarize`` registry; the union feeds the same
+second-level weighted k-means-- and is scored with the paper's Section 5
+metrics:
+
+  * summary size (records gathered to the coordinator = communication),
+  * l1 / l2 clustering loss on the ORIGINAL data, and the ratio to the
+    ``paper`` summarizer's loss (1.0 = parity),
+  * outlier preRec / precision / recall against ground truth,
+  * summary build throughput in points/sec (median site).
+
+Budget-accepting summarizers (uniform, coreset) are size-matched to the
+``paper`` summary so the comparison is at equal communication — the
+acceptance bar is ``paper`` beating ``uniform`` on outlier recall, which
+is exactly the paper's Tables 2–4 story (no candidates, no recall).
+
+A ``cosine`` section exercises the new metric end to end: the coreset and
+paper summarizers on unit-normalized susy-like data (build + mass
+conservation; the second level stays on l2sq, where the paper's theory
+lives).
+
+Emits ``BENCH_summarize.json`` at the repo root; the CI bench-smoke job
+gates it via the ``summarize_*`` keys of
+``benchmarks/stream_thresholds.json`` (see check_stream_regression.py).
+
+    PYTHONPATH=src:. python benchmarks/summarizer_bench.py [--scale 1.0]
+        [--sites 4] [--out BENCH_summarize.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+
+from benchmarks.common import Row, evaluate_summarizers, print_rows
+from repro.data.synthetic import gauss, kdd_like, partition, susy_like
+from repro.summarize import (SummarizerPolicy, registered_summarizers,
+                             summarize)
+
+_DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_summarize.json"
+
+
+def _policies() -> list[SummarizerPolicy]:
+    return [SummarizerPolicy(name) for name in sorted(registered_summarizers())]
+
+
+def _rows_to_json(rows: list[Row], per_site_n: int) -> dict:
+    by_name = {r.algo: r for r in rows}
+    ref = by_name.get("paper", rows[0])
+    out = {}
+    for r in rows:
+        out[r.algo] = {
+            "summary": r.summary,
+            "l1": r.l1,
+            "l2": r.l2,
+            "l1_ratio": r.l1 / max(ref.l1, 1e-12),
+            "l2_ratio": r.l2 / max(ref.l2, 1e-12),
+            "pre_rec": r.pre_rec,
+            "prec": r.prec,
+            "recall": r.recall,
+            "comm": r.comm,
+            "t_summary_s": r.t_summary,
+            "build_pts_per_s": per_site_n / max(r.t_summary, 1e-9),
+        }
+    return out
+
+
+def run_dataset(name: str, x, out_ids, *, k: int, t: int, sites: int,
+                seed: int) -> dict:
+    parts, gids = partition(x, sites, "random", seed=seed,
+                            outlier_ids=out_ids)
+    rows = evaluate_summarizers(x, out_ids, parts, gids, k, t, _policies(),
+                                seed=seed)
+    print_rows(f"summarize/{name} (n={x.shape[0]}, k={k}, t={t})", rows)
+    return {"n": int(x.shape[0]), "k": k, "t": t, "sites": sites,
+            "summarizers": _rows_to_json(rows, parts[0].shape[0])}
+
+
+def run_cosine(*, scale: float, seed: int) -> dict:
+    """Cosine-metric exercise: summarize unit-normalized susy-like data."""
+    n = max(int(60_000 * scale), 4_000)
+    t = max(int(n * 0.01), 40)
+    k = 10
+    x, out_ids = susy_like(n=n, t=t, seed=seed)
+    x = x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+    w = np.ones((n,), np.float32)
+    out = {"n": n, "k": k, "t": t, "metric": "cosine", "summarizers": {}}
+    for name in ("paper", "coreset"):
+        t0 = time.perf_counter()
+        s = summarize(x, w, jax.random.key(seed), k=k, t=t, metric="cosine",
+                      policy=SummarizerPolicy(name))
+        dt = time.perf_counter() - t0
+        true = set(out_ids.tolist())
+        picked = set(np.asarray(s.indices).tolist())
+        out["summarizers"][name] = {
+            "summary": int(s.points.shape[0]),
+            "mass_err": abs(float(s.weights.sum()) - n) / n,
+            "pre_rec": len(picked & true) / max(len(true), 1),
+            "build_pts_per_s": n / max(dt, 1e-9),
+        }
+    return out
+
+
+def run(scale: float = 1.0, sites: int = 4, seed: int = 0,
+        out_path: Path | str | None = _DEFAULT_OUT) -> dict:
+    result = {"scale": scale, "sites": sites, "datasets": {}}
+
+    n_centers, per_center = 20, max(int(2000 * scale), 150)
+    t = max(int(n_centers * per_center * 0.01), 40)
+    x, oid = gauss(n_centers=n_centers, per_center=per_center, d=5,
+                   sigma=0.1, t=t, seed=seed)
+    result["datasets"]["gauss"] = run_dataset(
+        "gauss", x, oid, k=n_centers, t=t, sites=sites, seed=seed)
+
+    n = max(int(100_000 * scale), 6_000)
+    x, oid = kdd_like(n=n, seed=seed)
+    result["datasets"]["kdd_like"] = run_dataset(
+        "kdd_like", x, oid, k=23, t=max(len(oid), 1), sites=sites, seed=seed)
+
+    n = max(int(100_000 * scale), 6_000)
+    t = max(int(n * 0.01), 40)
+    x, oid = susy_like(n=n, t=t, seed=seed)
+    result["datasets"]["susy_like"] = run_dataset(
+        "susy_like", x, oid, k=10, t=t, sites=sites, seed=seed)
+
+    result["cosine"] = run_cosine(scale=scale, seed=seed)
+
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--sites", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(_DEFAULT_OUT))
+    args = ap.parse_args()
+    res = run(scale=args.scale, sites=args.sites, seed=args.seed,
+              out_path=args.out)
+    cz = res["cosine"]["summarizers"]
+    print(f"\ncosine (unit susy-like, n={res['cosine']['n']}): " +
+          "  ".join(f"{n}: {e['summary']} recs, preRec {e['pre_rec']:.2f}, "
+                    f"{e['build_pts_per_s']:,.0f} pts/s"
+                    for n, e in cz.items()))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Append this run's key benchmark metrics to ``BENCH_trend.jsonl``.
+
+The regression gate (check_stream_regression.py) is a threshold: it only
+notices a metric once it falls off a cliff.  This script keeps the trend
+line: after every bench run it appends one JSON line with the headline
+metrics of ``BENCH_stream.json`` and ``BENCH_summarize.json`` (whichever
+exist), stamped with UTC time and the git commit, so slow drifts are
+visible across runs.  The CI bench-smoke job downloads the previous run's
+artifact, appends, and re-uploads — the artifact accumulates history.
+
+    PYTHONPATH=src python benchmarks/trend.py [--out BENCH_trend.jsonl] \
+        [--stream BENCH_stream.json] [--summarize BENCH_summarize.json] \
+        [--label "..."]
+
+Each line:
+
+    {"ts": "...", "commit": "...", "label": "...",
+     "stream": {ingest_pts_per_s, query_p50_ms, query_p99_ms, cost_ratio,
+                sharded_cost_ratio?, sharded_comm_bytes?},
+     "kernels": {"<op>.<backend>": pts_per_s, ...},
+     "summarize": {"<dataset>.<name>": {"recall": .., "l2_ratio": ..}, ...}}
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _git_commit() -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _load(path: str | Path) -> dict | None:
+    p = Path(path)
+    if not p.exists():
+        return None
+    try:
+        return json.loads(p.read_text())
+    except ValueError:
+        return None
+
+
+def stream_point(bench: dict) -> dict:
+    pt = {
+        "ingest_pts_per_s": round(float(bench["ingest_pts_per_s"]), 1),
+        "query_p50_ms": round(float(bench["query_p50_ms"]), 3),
+        "query_p99_ms": round(float(bench["query_p99_ms"]), 3),
+        "cost_ratio": round(float(bench["cost_ratio"]), 4),
+    }
+    sh = bench.get("sharded")
+    if sh:
+        pt["sharded_cost_ratio"] = round(float(sh["cost_ratio"]), 4)
+        pt["sharded_comm_bytes"] = int(sh["refresh_comm_bytes"])
+    return pt
+
+
+def kernels_point(bench: dict) -> dict:
+    pt = {}
+    for op, backends in bench.get("kernels", {}).get("ops", {}).items():
+        for name, e in backends.items():
+            if "pts_per_s" in e:
+                pt[f"{op}.{name}"] = float(e["pts_per_s"])
+    return pt
+
+
+def summarize_point(bench: dict) -> dict:
+    pt = {}
+    for ds, entry in bench.get("datasets", {}).items():
+        for name, e in entry.get("summarizers", {}).items():
+            pt[f"{ds}.{name}"] = {
+                "recall": round(float(e["recall"]), 4),
+                "l2_ratio": round(float(e["l2_ratio"]), 4),
+                "summary": int(e["summary"]),
+            }
+    return pt
+
+
+def build_point(stream: dict | None, summarize: dict | None,
+                label: str | None) -> dict:
+    point: dict = {
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "commit": _git_commit(),
+    }
+    if label:
+        point["label"] = label
+    if stream is not None:
+        point["stream"] = stream_point(stream)
+        kp = kernels_point(stream)
+        if kp:
+            point["kernels"] = kp
+    if summarize is not None:
+        point["summarize"] = summarize_point(summarize)
+    return point
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stream", default=str(_ROOT / "BENCH_stream.json"))
+    ap.add_argument("--summarize",
+                    default=str(_ROOT / "BENCH_summarize.json"))
+    ap.add_argument("--out", default=str(_ROOT / "BENCH_trend.jsonl"))
+    ap.add_argument("--label", default=None)
+    args = ap.parse_args()
+    stream, summarize = _load(args.stream), _load(args.summarize)
+    if stream is None and summarize is None:
+        print("trend: no bench outputs found; nothing to append",
+              file=sys.stderr)
+        return 1
+    point = build_point(stream, summarize, args.label)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(point, sort_keys=True) + "\n")
+    n = sum(1 for _ in open(args.out))
+    print(f"appended run {point['commit'] or '?'} to {args.out} "
+          f"({n} points)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

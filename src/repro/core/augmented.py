@@ -92,6 +92,13 @@ def augmented_summary_outliers(
 ) -> Summary:
     policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
                             caller="augmented_summary_outliers")
+    if metric == "cosine":
+        # the fixed-shape reassignment marks invalid center slots with a
+        # far-away coordinate sentinel; under a direction-only metric that
+        # sentinel is an ordinary direction and would capture points
+        raise ValueError(
+            "augmented_summary_outliers does not support metric='cosine'; "
+            "use summary_outliers or the weighted summarize layer")
     return _augmented_summary_outliers(x, key, k=k, t=t, alpha=alpha,
                                        beta=beta, metric=metric, policy=policy)
 

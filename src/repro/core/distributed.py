@@ -32,6 +32,8 @@ from repro.core.collective import gather_sites, replicated_coordinator
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.core.summary import summary_outliers, summary_outliers_compact
 from repro.kernels.dispatch import KernelPolicy
+from repro.summarize.base import (SummarizerPolicy, select_summarizer,
+                                  summarizer_policy)
 
 
 class DistClusterResult(NamedTuple):
@@ -47,6 +49,34 @@ def local_budget(t: int, s: int, partition: str) -> int:
     if partition == "adversarial":
         return t
     return max(1, int(math.ceil(2 * t / s)))
+
+
+def _site_summarizer(summarizer: SummarizerPolicy | None, summary_alg: str,
+                     *, metric: str, k: int, t: int):
+    """Resolve the per-site summary algorithm to a fixed-shape callable.
+
+    ``summarizer=None`` maps the legacy ``summary_alg`` string onto the
+    registry's ``paper`` entry with the variant pinned, so the default
+    reproduces the pre-registry Algorithm 1/2 calls bit for bit.
+    """
+    if summarizer is None:
+        if summary_alg not in ("augmented", "plain"):
+            raise ValueError(f"unknown summary_alg {summary_alg!r}")
+        summarizer = summarizer_policy("paper", variant=summary_alg)
+    spec = select_summarizer(summarizer, metric=metric, k=k, t=t)
+    if spec.site_summary is None:
+        raise ValueError(
+            f"summarizer {spec.name!r} has no fixed-shape site path and "
+            f"cannot run inside shard_map; use simulate_coordinator "
+            f"(host-driven) for it")
+    params = summarizer.params_dict()
+
+    def summarize_site(x, key, *, policy):
+        return spec.site_summary(x, key, k=k, t=t, alpha=2.0, beta=0.45,
+                                 metric=metric, kernel_policy=policy,
+                                 **params)
+
+    return summarize_site
 
 
 def _second_level(points, weights, valid, gids, key, *, k, t, iters, metric, policy):
@@ -67,20 +97,28 @@ def distributed_cluster(
     axis: str = "sites",
     partition: str = "random",
     summary_alg: str = "augmented",
+    summarizer: SummarizerPolicy | None = None,
     second_iters: int = 25,
     metric: str = "l2sq",
     policy: KernelPolicy | None = None,
 ) -> DistClusterResult:
-    """x_parts: (s, n_per, d), sharded over ``axis`` on the leading dim."""
+    """x_parts: (s, n_per, d), sharded over ``axis`` on the leading dim.
+
+    ``summarizer`` selects each site's summary algorithm from the
+    ``repro.summarize`` registry (it must provide a fixed-shape site path);
+    None maps the legacy ``summary_alg`` string to the registry's ``paper``
+    entry, reproducing the pre-registry results bit for bit.
+    """
     s, n_per, d = x_parts.shape
     t_i = local_budget(t, s, partition)
-    summarize = augmented_summary_outliers if summary_alg == "augmented" else summary_outliers
+    summarize = _site_summarizer(summarizer, summary_alg,
+                                 metric=metric, k=k, t=t_i)
 
     def per_site(xp, key):
         x_local = xp[0]  # (n_per, d) — this site's block
         site = jax.lax.axis_index(axis)
         skey = jax.random.fold_in(key, site)
-        summ = summarize(x_local, skey, k=k, t=t_i, metric=metric, policy=policy)
+        summ = summarize(x_local, skey, policy=policy)
         gids = jnp.where(summ.valid, summ.indices + site * n_per, -1)
         # --- the one round of communication ---
         pts, wts, val, gid = gather_sites(
@@ -112,6 +150,7 @@ def simulate_coordinator(
     t: int,
     partition: str = "random",
     summary_alg: str = "augmented",
+    summarizer: SummarizerPolicy | None = None,
     second_iters: int = 25,
     metric: str = "l2sq",
     policy: KernelPolicy | None = None,
@@ -121,6 +160,12 @@ def simulate_coordinator(
 
     Returns (result: DistClusterResult-like dict, per-site summaries).
     Global ids are offsets into the concatenation of ``parts``.
+
+    ``summarizer`` runs any registered ``repro.summarize`` algorithm per
+    site through its weighted entry point (unit weights) — including the
+    host-driven ones (``ball_cover``, ``coreset``) that cannot run inside
+    ``distributed_cluster``'s shard_map program.  None keeps the legacy
+    ``summary_alg``/``compact`` selection, bit for bit.
     """
     s = len(parts)
     t_i = local_budget(t, s, partition)
@@ -129,6 +174,17 @@ def simulate_coordinator(
     all_pts, all_w, all_gid, all_cand = [], [], [], []
     for i, part in enumerate(parts):
         skey = jax.random.fold_in(key, i)
+        if summarizer is not None:
+            from repro.summarize.base import summarize as _summarize_w
+
+            ws = _summarize_w(part, np.ones((part.shape[0],), np.float32),
+                              skey, k=k, t=t_i, metric=metric,
+                              policy=summarizer, kernel_policy=policy)
+            all_pts.append(np.asarray(ws.points))
+            all_w.append(np.asarray(ws.weights))
+            all_gid.append(np.asarray(ws.indices) + offs[i])
+            all_cand.append(np.asarray(ws.is_candidate))
+            continue
         if summary_alg == "augmented":
             summ = augmented_summary_outliers(jnp.asarray(part), skey, k=k, t=t_i,
                                               metric=metric, policy=policy)

@@ -26,6 +26,10 @@ from repro.kernels.pdist.ops import min_argmin
 def _dist_to(x, c, metric):
     if metric == "l1":
         return jnp.abs(x - c[None, :]).sum(-1)
+    if metric == "cosine":
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-30)
+        cn = c / jnp.maximum(jnp.linalg.norm(c), 1e-30)
+        return jnp.clip(1.0 - xn @ cn, 0.0, 2.0)
     sq = ((x - c[None, :]) ** 2).sum(-1)
     return sq if metric == "l2sq" else jnp.sqrt(sq)
 

@@ -52,7 +52,9 @@ def accumulate_by_assignment(x, w, amin, k: int):
 
 @dispatch.register(
     "lloyd_step", "blocked",
-    supports=lambda metric, platform, dtype, n, m, d: metric in ("l2sq", "l2", "l1"),
+    # cosine: the weighted-mean center update is the spherical k-means step
+    # (only the mean's direction matters — distances normalize the center)
+    supports=lambda metric, platform, dtype, n, m, d: metric in ("l2sq", "l2", "l1", "cosine"),
     priority=lambda platform: 1,
     default_block_n=lambda platform: _DEFAULT_BLOCK_N,
     tune_candidates=(4096, 8192, 16384, 32768, 65536),
@@ -69,7 +71,7 @@ def lloyd_step_blocked(x, w, c, *, metric: str = "l2sq",
 
 @dispatch.register(
     "lloyd_step", "ref",
-    supports=lambda metric, platform, dtype, n, m, d: metric in ("l2sq", "l2", "l1"),
+    supports=lambda metric, platform, dtype, n, m, d: metric in ("l2sq", "l2", "l1", "cosine"),
     priority=lambda platform: 0,
     default_block_n=lambda platform: _DEFAULT_BLOCK_N,
     make_args=_lloyd_args,

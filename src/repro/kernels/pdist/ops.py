@@ -99,7 +99,9 @@ def min_argmin_reference(x: jnp.ndarray, c: jnp.ndarray, *,
 
 @dispatch.register(
     "min_argmin", "pallas",
-    supports=lambda metric, platform, dtype, n, m, d: metric in _ref.METRICS,
+    # cosine is blocked/ref-only: the kernel's far-away padding sentinel is
+    # a direction under a normalized metric, not "infinitely far"
+    supports=lambda metric, platform, dtype, n, m, d: metric in _ref.PALLAS_METRICS,
     # interpret mode off-TPU is test-only: never auto-picked there
     priority=lambda platform: 10 if platform == "tpu" else -1,
     default_block_n=lambda platform: 512,

@@ -8,16 +8,29 @@ computes d(x, S_i) for all remaining points.  The Pallas kernel in
 (ties broken toward the smaller index in both).
 
 Metrics:
-  * ``l2sq`` — squared Euclidean distance (used for (k,t)-means).
-  * ``l2``   — Euclidean distance (used for (k,t)-median).
-  * ``l1``   — Manhattan distance (the paper notes any metric with a
-               distance oracle works).
+  * ``l2sq``   — squared Euclidean distance (used for (k,t)-means).
+  * ``l2``     — Euclidean distance (used for (k,t)-median).
+  * ``l1``     — Manhattan distance (the paper notes any metric with a
+                 distance oracle works).
+  * ``cosine`` — 1 - cos(x, c) in [0, 2]; rows are normalized internally so
+                 callers may pass unnormalized data.  Served by the blocked
+                 and ref backends only (the Pallas kernel's far-away padding
+                 sentinel is meaningless under a direction-only metric, so
+                 its capability predicate excludes cosine and auto selection
+                 routes around it).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-METRICS = ("l2sq", "l2", "l1")
+METRICS = ("l2sq", "l2", "l1", "cosine")
+
+# metrics the Pallas pdist kernel implements (see kernel.py); keep in sync
+PALLAS_METRICS = ("l2sq", "l2", "l1")
+
+
+def _unit(v: jnp.ndarray) -> jnp.ndarray:
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-30)
 
 
 def pairwise(x: jnp.ndarray, c: jnp.ndarray, metric: str = "l2sq") -> jnp.ndarray:
@@ -27,6 +40,9 @@ def pairwise(x: jnp.ndarray, c: jnp.ndarray, metric: str = "l2sq") -> jnp.ndarra
         raise ValueError(f"unknown metric {metric!r}")
     if metric == "l1":
         return jnp.abs(x[:, None, :] - c[None, :, :]).sum(-1)
+    if metric == "cosine":
+        sim = _unit(x) @ _unit(c).T
+        return jnp.clip(1.0 - sim, 0.0, 2.0)
     x2 = (x * x).sum(-1)
     c2 = (c * c).sum(-1)
     d2 = x2[:, None] + c2[None, :] - 2.0 * (x @ c.T)

@@ -57,6 +57,10 @@ Modules: ``weighted`` (weighted Algorithm 1 + merge/reduce primitives),
 ``tree`` (buffer tree, sliding-window eviction, checkpointable state),
 ``service`` (micro-batched scoring front end, double-buffered refresh +
 CheckpointManager glue), ``sharded`` (per-site trees + gathered refresh).
+The summary algorithm itself is pluggable: every config takes a
+``summarizer=SummarizerPolicy(...)`` selecting a ``repro.summarize``
+registry entry (default: the paper's Algorithm 1, bit-identical to the
+pre-registry behavior).
 
 Remaining follow-on tracked in ROADMAP.md: validate Pallas scoring on
 real TPU hardware.

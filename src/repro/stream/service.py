@@ -53,6 +53,7 @@ from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.kernels.pdist.ops import min_argmin
 from repro.stream.tree import StreamTree, TreeConfig
+from repro.summarize.base import SummarizerPolicy, get_default_summarizer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +68,9 @@ class ServiceConfig:
     metric: str = "l2sq"
     # None = capture the process default (set_default_policy) at construction
     policy: Optional[KernelPolicy] = None
+    # None = capture the process default (set_default_summarizer); selects
+    # the tree's summary algorithm (leaf reduction + merge-reduce)
+    summarizer: Optional[SummarizerPolicy] = None
     window: Optional[int] = None
     async_refresh: bool = False      # fit cadence models off the ingest path
     seed: int = 0
@@ -74,11 +78,14 @@ class ServiceConfig:
     def __post_init__(self):
         if self.policy is None:
             object.__setattr__(self, "policy", get_default_policy())
+        if self.summarizer is None:
+            object.__setattr__(self, "summarizer", get_default_summarizer())
 
     def tree_config(self) -> TreeConfig:
         return TreeConfig(
             dim=self.dim, k=self.k, t=self.t, leaf_size=self.leaf_size,
             metric=self.metric, policy=self.policy,
+            summarizer=self.summarizer,
             window=self.window, seed=self.seed)
 
 

@@ -60,6 +60,7 @@ from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.stream.service import ModelState, ServingFrontEnd, fit_model
 from repro.stream.tree import StreamTree, TreeConfig
 from repro.stream.weighted import _bucket
+from repro.summarize.base import SummarizerPolicy, get_default_summarizer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +76,9 @@ class ShardedServiceConfig:
     metric: str = "l2sq"
     # None = capture the process default (set_default_policy) at construction
     policy: Optional[KernelPolicy] = None
+    # None = capture the process default (set_default_summarizer); every
+    # site's tree runs the same summary algorithm
+    summarizer: Optional[SummarizerPolicy] = None
     window: Optional[int] = None     # global raw points; split over sites
     site_budget: str = "full"        # "full": t per site (window/adversarial
     #                                  safe); "paper": 2t/s (cheaper roots)
@@ -85,6 +89,8 @@ class ShardedServiceConfig:
     def __post_init__(self):
         if self.policy is None:
             object.__setattr__(self, "policy", get_default_policy())
+        if self.summarizer is None:
+            object.__setattr__(self, "summarizer", get_default_summarizer())
 
     def site_t(self) -> int:
         if self.site_budget == "full":
@@ -102,7 +108,7 @@ class ShardedServiceConfig:
         return TreeConfig(
             dim=self.dim, k=self.k, t=self.site_t(),
             leaf_size=self.leaf_size, metric=self.metric,
-            policy=self.policy, window=w,
+            policy=self.policy, summarizer=self.summarizer, window=w,
             seed=self.seed)
 
 

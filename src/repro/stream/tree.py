@@ -1,12 +1,16 @@
-"""Merge-and-reduce buffer tree over weighted Summary-Outliers summaries.
+"""Merge-and-reduce buffer tree over weighted summaries.
 
 Ingest path: raw points accumulate in a leaf buffer; every ``leaf_size``
-points the buffer is reduced to a level-0 weighted summary (Algorithm 1 at
-full outlier budget t).  Whenever two summaries share a level, the older
-pair is merged (concatenate) and reduced (weighted Summary-Outliers on the
-union) into one level-(l+1) summary — the classic binary-counter coreset
-tree, so a stream of n points holds at most O(log(n / leaf_size)) live
-summaries of O(m + 8t) records each: O(m log n) memory total.
+points the buffer is reduced to a level-0 weighted summary (by default
+Algorithm 1 at full outlier budget t; ``TreeConfig.summarizer`` selects
+any registered ``repro.summarize`` algorithm for both the leaf reduction
+and the merge-reduce step).  Whenever two summaries share a level, the
+older pair is merged (concatenate) and reduced (the summarizer re-run on
+the union) into one level-(l+1) summary — the classic binary-counter
+coreset tree, so a stream of n points holds at most O(log(n / leaf_size))
+live summaries of O(m + 8t) records each: O(m log n) memory total.
+Mass conservation — the summarize-registry contract — is exactly what
+makes any registered summarizer safe to slot in here.
 
 Sliding window (optional): with ``window=W`` set, merges are capped so no
 summary spans more than max(leaf_size, W // 4) raw points, and summaries
@@ -21,7 +25,6 @@ manifest — no pickling.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import List, Optional
 
 import jax
@@ -29,8 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
-from repro.stream.weighted import (WeightedSummary, _bucket, max_rounds,
-                                   resummarize, weighted_summary_outliers)
+from repro.stream.weighted import WeightedSummary, _bucket
+from repro.summarize.base import (SummarizerPolicy, get_default_summarizer,
+                                  record_bound, reduce_summaries, summarize)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +48,10 @@ class TreeConfig:
     metric: str = "l2sq"
     # None = capture the process default (set_default_policy) at construction
     policy: Optional[KernelPolicy] = None
+    # None = capture the process default (set_default_summarizer); the
+    # default "auto" resolves to the paper summarizer — bit-identical to
+    # the pre-registry weighted_summary_outliers/resummarize calls
+    summarizer: Optional[SummarizerPolicy] = None
     window: Optional[int] = None     # raw points; None = full stream
     max_summaries: int = 64          # checkpoint slots; force-merge beyond
     max_points: int = 2 ** 34        # stream-length bound for the record cap
@@ -52,22 +60,21 @@ class TreeConfig:
     def __post_init__(self):
         if self.policy is None:
             object.__setattr__(self, "policy", get_default_policy())
+        if self.summarizer is None:
+            object.__setattr__(self, "summarizer", get_default_summarizer())
 
 
 def record_cap(cfg: TreeConfig) -> int:
     """Static per-summary record capacity for checkpoint packing.
 
-    Centers are bounded by rounds * m where rounds depends only on the mass
-    (<= cfg.max_points) and candidates carry >= 1 mass each in tree use
-    (raw points enter with unit weight), so candidates <= 8t.
+    Delegates to the selected summarizer's registered ``record_bound`` —
+    for the paper summarizer: centers <= rounds * m where rounds depends
+    only on the mass (<= cfg.max_points) and candidates carry >= 1 mass
+    each in tree use (raw points enter with unit weight), so <= 8t.
     """
-    rounds = max_rounds(float(cfg.max_points), cfg.t, cfg.beta)
-    m = math.ceil(cfg.alpha * max(cfg.k, math.ceil(math.log(max(cfg.leaf_size, 2)))))
-    cap = rounds * m + 8 * cfg.t + 1
-    # one fixed-point pass: merges see up to 2*cap records, which can only
-    # grow kappa (and m) logarithmically.
-    m = math.ceil(cfg.alpha * max(cfg.k, math.ceil(math.log(max(2 * cap, 2)))))
-    return rounds * m + 8 * cfg.t + 1
+    return record_bound(cfg.summarizer, metric=cfg.metric, k=cfg.k, t=cfg.t,
+                        alpha=cfg.alpha, beta=cfg.beta,
+                        max_points=cfg.max_points, leaf_size=cfg.leaf_size)
 
 
 @dataclasses.dataclass
@@ -123,10 +130,11 @@ class StreamTree:
 
     def _flush_leaf(self) -> None:
         cfg = self.cfg
-        summ = weighted_summary_outliers(
+        summ = summarize(
             self._buf[:self._buf_n], self._buf_w[:self._buf_n],
             self._next_key(), k=cfg.k, t=cfg.t, alpha=cfg.alpha,
-            beta=cfg.beta, metric=cfg.metric, policy=cfg.policy)
+            beta=cfg.beta, metric=cfg.metric, policy=cfg.summarizer,
+            kernel_policy=cfg.policy)
         self._check_cap(summ)
         self.nodes.append(TreeNode(
             summary=summ, level=0, min_seq=self._flushed,
@@ -153,10 +161,10 @@ class StreamTree:
     def _merge_pair(self, i: int, j: int) -> None:
         a, b = self.nodes[i], self.nodes[j]
         cfg = self.cfg
-        summ = resummarize(
+        summ = reduce_summaries(
             [a.summary, b.summary], self._next_key(), k=cfg.k, t=cfg.t,
             alpha=cfg.alpha, beta=cfg.beta, metric=cfg.metric,
-            policy=cfg.policy)
+            policy=cfg.summarizer, kernel_policy=cfg.policy)
         self._check_cap(summ)
         self.nodes[i] = TreeNode(
             summary=summ, level=max(a.level, b.level) + 1,

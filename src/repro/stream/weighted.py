@@ -55,6 +55,20 @@ def _bucket(n: int, lo: int = 256) -> int:
     return b
 
 
+def categorical_by_weight(key: jax.Array, w: np.ndarray, shape) -> np.ndarray:
+    """Sample ids (with replacement) with probability ∝ ``w`` (all > 0).
+
+    Logits are -inf-padded to the shared power-of-two bucket so the jitted
+    categorical compiles once per bucket, not once per distinct row count —
+    the same idiom as the distance calls.  Shared by every host-driven
+    summarizer (weighted Algorithm 1, ball_cover, coreset seeding).
+    """
+    logits = np.full((_bucket(w.size),), -np.inf, np.float32)
+    logits[:w.size] = np.log(w)
+    return np.asarray(jax.random.categorical(key, jnp.asarray(logits),
+                                             shape=shape))
+
+
 def _min_argmin_bucketed(xr: np.ndarray, c: np.ndarray, *, metric: str,
                          policy: Optional[KernelPolicy]):
     """min_argmin with the row count padded to a power-of-two bucket, so the
@@ -77,6 +91,10 @@ class WeightedSummary(NamedTuple):
     is_candidate (s,) bool   — True for survivors X_r (outlier candidates)
     n_rounds     int         — rounds the ball-growing loop ran
     total_weight float       — input mass (== weights.sum() up to fp error)
+    indices      (s,) i64 | None — row ids of the summary points in the
+                 summarizer's *input* (after zero-weight rows are dropped the
+                 ids still refer to the original input rows).  None once the
+                 provenance is lost (merges, checkpoint restores).
     """
 
     points: np.ndarray
@@ -84,6 +102,7 @@ class WeightedSummary(NamedTuple):
     is_candidate: np.ndarray
     n_rounds: int
     total_weight: float
+    indices: Optional[np.ndarray] = None
 
 
 def max_rounds(total_weight: float, t: int, beta: float) -> int:
@@ -110,22 +129,14 @@ def weighted_summary_outliers(
     use_pallas: Optional[bool] = None,  # deprecated alias
 ) -> WeightedSummary:
     """Weighted Summary-Outliers over records (points[i], weights[i])."""
+    from repro.summarize.base import clean_weighted_input, empty_summary
+
     policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
                             caller="weighted_summary_outliers")
-    x = np.asarray(points, np.float32)
-    w = np.asarray(weights, np.float32).reshape(-1)
-    if x.ndim != 2 or x.shape[0] != w.shape[0]:
-        raise ValueError(f"points {x.shape} / weights {w.shape} mismatch")
-    keep = w > 0
-    x, w = x[keep], w[keep]
+    x, w, orig_ids, total = clean_weighted_input(points, weights)
     n = x.shape[0]
-    total = float(w.sum())
     if n == 0:
-        return WeightedSummary(
-            points=np.zeros((0, x.shape[1] if x.ndim == 2 else 0), np.float32),
-            weights=np.zeros((0,), np.float32),
-            is_candidate=np.zeros((0,), bool),
-            n_rounds=0, total_weight=0.0)
+        return empty_summary(x.shape[1])
 
     kappa = max(k, max(1, math.ceil(math.log(max(n, 2)))))
     m = max(1, int(math.ceil(alpha * kappa)))
@@ -140,12 +151,7 @@ def weighted_summary_outliers(
         key, sk = jax.random.split(key)
         wr = w[remaining]
         # Line 6 (weighted): sample m records with replacement, p ∝ weight.
-        # -inf-padded to the same bucket as the distance call (one trace per
-        # bucket, not per round).
-        logits = np.full((_bucket(wr.size),), -np.inf, np.float32)
-        logits[:wr.size] = np.log(wr)
-        pick = np.asarray(jax.random.categorical(sk, jnp.asarray(logits),
-                                                 shape=(m,)))
+        pick = categorical_by_weight(sk, wr, (m,))
         idx = remaining[pick]                 # global ids of this round's S_i
         mind, amin = _min_argmin_bucketed(x[remaining], x[idx], metric=metric,
                                           policy=policy)
@@ -175,7 +181,8 @@ def weighted_summary_outliers(
                            weights=wts.astype(np.float32),
                            is_candidate=cand,
                            n_rounds=rounds,
-                           total_weight=total)
+                           total_weight=total,
+                           indices=orig_ids[np.concatenate([centers, remaining])])
 
 
 def merge_summaries(summaries: Sequence[WeightedSummary]) -> WeightedSummary:

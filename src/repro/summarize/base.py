@@ -1,0 +1,360 @@
+"""Summarizer registry: pluggable summary construction for every layer.
+
+The paper's whole pipeline is "build a small summary per site, cluster the
+union" — and until this module, summary construction was the one layer
+still hard-wired: ``distributed_cluster``, ``StreamTree`` and
+``ShardedStreamService`` called Algorithm 1/2 directly.  This module is
+the summarize-layer twin of ``repro.kernels.dispatch``:
+
+* a **registry** of summarizers, each registered under a name with a
+  capability predicate over (metric, k, t) and an auto-selection priority;
+* one **``SummarizerPolicy``** frozen dataclass ``(name, params)`` — the
+  single object threaded through ``core/distributed.py``, the stream tree
+  reduce step and the benchmarks, or installed process-wide with
+  ``set_default_summarizer``;
+* a uniform **protocol**: weighted points in, mass-conserving
+  ``repro.stream.weighted.WeightedSummary`` out.  Mass conservation is the
+  contract that makes every implementation compose with merge-and-reduce
+  (unions of summaries represent unions of data) and with Algorithm 3's
+  second level (the union's total weight equals ``n``).
+
+Registered implementations (see the sibling modules):
+
+  ``paper``      — Algorithm 1 / Algorithm 2 / the weighted generalization;
+                   the site path auto-selects augmented when t >> k.
+  ``uniform``    — weighted reservoir sampling + nearest-sample mass
+                   (the paper's cheap ``rand`` baseline, generalized).
+  ``ball_cover`` — ball-cover aggregation robust to heavy noise
+                   (Guo & Li, arXiv:1810.07852 flavor): per-round sample
+                   balls, fold low-mass balls into heavy ones so noise
+                   points never survive as centers.
+  ``coreset``    — k-means||-seeded sensitivity-sampling coreset in the
+                   spirit of Dandolo et al. (arXiv:2202.08173); any metric
+                   with a distance oracle, including ``cosine``.
+
+Unlike the kernel registry — where an explicit-but-unsupported backend
+falls back to auto selection, because backends compute the same function —
+an explicit summarizer that cannot serve a call **raises**: summarizers
+are different algorithms with different outputs, so a silent substitution
+would change results.
+
+This module deliberately imports nothing from ``repro.stream`` at module
+scope (the stream tree imports *us*); implementation modules are imported
+lazily on first registry use, exactly like the kernel-op modules.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Sequence, TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # avoid the stream <-> summarize import cycle at runtime
+    from repro.core.summary import Summary
+    from repro.stream.weighted import WeightedSummary
+
+
+@dataclasses.dataclass(frozen=True)
+class SummarizerPolicy:
+    """The one summary-algorithm selection object threaded through layers.
+
+    name    — "auto" (pick the best-supported registered summarizer for
+              this (metric, k, t)), or an explicit registry name.
+    params  — algorithm parameters as a sorted tuple of (key, value) pairs
+              so the policy stays hashable (dicts are accepted and
+              canonicalized).  Use :func:`summarizer_policy` for keyword
+              ergonomics: ``summarizer_policy("coreset", budget=512)``.
+    """
+
+    name: str = "auto"
+    params: tuple = ()
+
+    def __post_init__(self):
+        p = self.params
+        if isinstance(p, dict):
+            p = p.items()
+        object.__setattr__(self, "params", tuple(sorted(tuple(p))))
+
+    def params_dict(self) -> dict:
+        return dict(self.params)
+
+    def with_params(self, **updates) -> "SummarizerPolicy":
+        merged = {**self.params_dict(), **updates}
+        return SummarizerPolicy(self.name, tuple(sorted(merged.items())))
+
+
+def summarizer_policy(name: str = "auto", **params) -> SummarizerPolicy:
+    """Keyword-friendly constructor: ``summarizer_policy("uniform", budget=256)``."""
+    return SummarizerPolicy(name, tuple(sorted(params.items())))
+
+
+class SummarizerSpec(NamedTuple):
+    """One registered summary algorithm.
+
+    summarize     — (points, weights, key, *, k, t, alpha, beta, metric,
+                    kernel_policy, **params) -> WeightedSummary.  Host-driven
+                    (numpy set logic, jitted distance inner loops), mass
+                    conserving, ``indices`` populated with input-row ids.
+    site_summary  — optional fixed-shape unit-weight path
+                    (x, key, *, k, t, alpha, beta, metric, kernel_policy,
+                    **params) -> core.summary.Summary, jit/shard_map safe —
+                    what ``distributed_cluster`` runs per site.  None when
+                    the algorithm is host-driven only.
+    supports      — (metric, k, t) -> bool capability predicate.
+    priority      — auto-selection priority; < 0 means never auto-picked
+                    (baselines you must ask for by name).
+    record_bound  — (params, *, k, t, alpha, beta, max_points, leaf_size)
+                    -> int static per-summary record capacity, used by the
+                    stream tree for checkpoint packing.
+    sized         — True when the algorithm accepts an external ``budget``
+                    param (reservoir/coreset style); the benchmark uses
+                    this to size-match baselines to the paper summary.
+    """
+
+    name: str
+    summarize: Callable
+    supports: Callable
+    priority: int
+    record_bound: Callable
+    description: str
+    site_summary: Optional[Callable] = None
+    sized: bool = False
+
+
+_REGISTRY: dict[str, SummarizerSpec] = {}
+_default_policy = SummarizerPolicy()
+_registered = False
+
+
+def _ensure_registered() -> None:
+    """Import the implementation modules so they land in the registry."""
+    global _registered
+    if _registered:
+        return
+    _registered = True
+    from repro.summarize import ball_cover as _bc    # noqa: F401
+    from repro.summarize import coreset as _cs       # noqa: F401
+    from repro.summarize import paper as _paper      # noqa: F401
+    from repro.summarize import uniform as _uni      # noqa: F401
+
+
+def register_summarizer(
+    name: str,
+    *,
+    summarize: Callable,
+    supports: Callable,
+    priority: int,
+    record_bound: Callable,
+    description: str,
+    site_summary: Optional[Callable] = None,
+    sized: bool = False,
+) -> SummarizerSpec:
+    spec = SummarizerSpec(name=name, summarize=summarize, supports=supports,
+                          priority=priority, record_bound=record_bound,
+                          description=description, site_summary=site_summary,
+                          sized=sized)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def registered_summarizers() -> dict[str, SummarizerSpec]:
+    _ensure_registered()
+    return dict(_REGISTRY)
+
+
+def get_summarizer(name: str) -> SummarizerSpec:
+    _ensure_registered()
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(f"unknown summarizer {name!r}; "
+                         f"registered: {sorted(_REGISTRY)}")
+    return spec
+
+
+# --------------------------------------------------------------- policy state
+def get_default_summarizer() -> SummarizerPolicy:
+    return _default_policy
+
+
+def set_default_summarizer(policy: SummarizerPolicy) -> SummarizerPolicy:
+    """Install ``policy`` process-wide; returns the previous default."""
+    global _default_policy
+    prev = _default_policy
+    _default_policy = policy
+    return prev
+
+
+@contextlib.contextmanager
+def using_summarizer(policy: SummarizerPolicy):
+    """Context manager: scoped :func:`set_default_summarizer`."""
+    prev = set_default_summarizer(policy)
+    try:
+        yield policy
+    finally:
+        set_default_summarizer(prev)
+
+
+def resolve_summarizer(policy: Optional[SummarizerPolicy]) -> SummarizerPolicy:
+    return policy if policy is not None else get_default_summarizer()
+
+
+def select_summarizer(
+    policy: Optional[SummarizerPolicy] = None,
+    *,
+    metric: str,
+    k: int,
+    t: int,
+) -> SummarizerSpec:
+    """Pick the spec serving this call under ``policy``.
+
+    Explicit names raise when unsupported (a different summarizer is a
+    different algorithm, not an interchangeable implementation).
+    """
+    policy = resolve_summarizer(policy)
+    _ensure_registered()
+    if policy.name != "auto":
+        spec = get_summarizer(policy.name)
+        if not spec.supports(metric, k, t):
+            raise ValueError(
+                f"summarizer {policy.name!r} does not support "
+                f"metric={metric!r} (k={k}, t={t})")
+        return spec
+    candidates = [s for s in _REGISTRY.values()
+                  if s.priority >= 0 and s.supports(metric, k, t)]
+    if not candidates:
+        raise ValueError(
+            f"no registered summarizer supports metric={metric!r} "
+            f"(k={k}, t={t})")
+    return max(candidates, key=lambda s: s.priority)
+
+
+# ----------------------------------------------------------------- entry points
+def summarize(
+    points,
+    weights,
+    key,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    policy: Optional[SummarizerPolicy] = None,
+    kernel_policy=None,
+) -> "WeightedSummary":
+    """Weighted records in -> mass-conserving ``WeightedSummary`` out.
+
+    The one entry point the stream tree's leaf flush and reduce step, the
+    host-side coordinator and the benchmarks all funnel through; ``policy``
+    selects the algorithm, ``kernel_policy`` the distance backend.
+    """
+    policy = resolve_summarizer(policy)
+    spec = select_summarizer(policy, metric=metric, k=k, t=t)
+    return spec.summarize(points, weights, key, k=k, t=t, alpha=alpha,
+                          beta=beta, metric=metric,
+                          kernel_policy=kernel_policy, **policy.params_dict())
+
+
+def reduce_summaries(
+    summaries: Sequence["WeightedSummary"],
+    key,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    policy: Optional[SummarizerPolicy] = None,
+    kernel_policy=None,
+) -> "WeightedSummary":
+    """Merge (concatenate; lossless) then re-summarize under ``policy``.
+
+    The registry-dispatched generalization of
+    ``repro.stream.weighted.resummarize``; with the default policy it is
+    that function, bit for bit.
+    """
+    from repro.stream.weighted import merge_summaries
+
+    merged = merge_summaries(summaries)
+    if merged.points.shape[0] == 0:
+        return merged
+    return summarize(merged.points, merged.weights, key, k=k, t=t,
+                     alpha=alpha, beta=beta, metric=metric, policy=policy,
+                     kernel_policy=kernel_policy)
+
+
+def site_summary(
+    x,
+    key,
+    *,
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    metric: str = "l2sq",
+    policy: Optional[SummarizerPolicy] = None,
+    kernel_policy=None,
+) -> "Summary":
+    """Fixed-shape unit-weight site path (jit / shard_map composable).
+
+    Raises for summarizers without one (host-driven algorithms); those run
+    through ``simulate_coordinator``'s host loop instead.
+    """
+    policy = resolve_summarizer(policy)
+    spec = select_summarizer(policy, metric=metric, k=k, t=t)
+    if spec.site_summary is None:
+        raise ValueError(
+            f"summarizer {spec.name!r} has no fixed-shape site path "
+            f"(host-driven only); use simulate_coordinator or the weighted "
+            f"summarize() entry point")
+    return spec.site_summary(x, key, k=k, t=t, alpha=alpha, beta=beta,
+                             metric=metric, kernel_policy=kernel_policy,
+                             **policy.params_dict())
+
+
+def record_bound(
+    policy: Optional[SummarizerPolicy] = None,
+    *,
+    metric: str = "l2sq",
+    k: int,
+    t: int,
+    alpha: float = 2.0,
+    beta: float = 0.45,
+    max_points: int,
+    leaf_size: int,
+) -> int:
+    """Static per-summary record capacity under ``policy`` (tree packing)."""
+    policy = resolve_summarizer(policy)
+    spec = select_summarizer(policy, metric=metric, k=k, t=t)
+    return int(spec.record_bound(policy.params_dict(), k=k, t=t, alpha=alpha,
+                                 beta=beta, max_points=max_points,
+                                 leaf_size=leaf_size))
+
+
+# ------------------------------------------------------------- shared helpers
+def clean_weighted_input(points, weights):
+    """Canonicalize a weighted record set for the host-driven summarizers.
+
+    Returns ``(x (n,d) f32, w (n,) f32, orig_ids (n,) i64, total float)``
+    with zero-weight rows dropped; ``orig_ids`` maps kept rows back to the
+    caller's row numbering so ``WeightedSummary.indices`` stays meaningful.
+    """
+    x = np.asarray(points, np.float32)
+    w = np.asarray(weights, np.float32).reshape(-1)
+    if x.ndim != 2 or x.shape[0] != w.shape[0]:
+        raise ValueError(f"points {x.shape} / weights {w.shape} mismatch")
+    keep = w > 0
+    orig = np.nonzero(keep)[0]
+    x, w = x[keep], w[keep]
+    return x, w, orig, float(w.sum())
+
+
+def empty_summary(d: int) -> "WeightedSummary":
+    from repro.stream.weighted import WeightedSummary
+
+    return WeightedSummary(points=np.zeros((0, d), np.float32),
+                           weights=np.zeros((0,), np.float32),
+                           is_candidate=np.zeros((0,), bool),
+                           n_rounds=0, total_weight=0.0,
+                           indices=np.zeros((0,), np.int64))

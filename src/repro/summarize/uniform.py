@@ -1,0 +1,89 @@
+"""The ``uniform`` summarizer: weighted reservoir sampling baseline.
+
+Generalizes ``repro.core.rand_summary`` (the paper's ``rand`` baseline) to
+weighted inputs: sample ``budget`` records without replacement with
+inclusion probability ∝ weight (the Efraimidis–Spirakis exponential-key
+reservoir, computed in log space), then assign every input record's full
+mass to its nearest sample — so the output conserves mass exactly, like
+every registered summarizer.
+
+No outlier candidates: this is precisely why the baseline fails at outlier
+detection in the paper's Tables 2–4, and why the quality benchmark
+(`benchmarks/summarizer_bench.py`) expects ``paper`` to beat it on recall
+at matched summary size.  Never auto-picked (priority < 0): you ask for a
+baseline by name.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.summarize.base import (clean_weighted_input, empty_summary,
+                                  register_summarizer)
+
+
+def default_budget(n: int, k: int, t: int) -> int:
+    """The paper's baseline budget O(k log n + t)."""
+    from repro.core.kmeans_pp import pp_budget
+
+    return pp_budget(n, k, t)
+
+
+def _summarize(points, weights, key, *, k, t, alpha, beta, metric,
+               kernel_policy, budget=None):
+    from repro.stream.weighted import WeightedSummary, _min_argmin_bucketed
+
+    x, w, orig, total = clean_weighted_input(points, weights)
+    n = x.shape[0]
+    if n == 0:
+        return empty_summary(np.asarray(points, np.float32).shape[-1])
+    b = int(budget) if budget is not None else default_budget(n, k, t)
+    b = max(1, min(b, n))
+    if b == n:
+        idx = np.arange(n)
+    else:
+        # A-ES reservoir keys u^(1/w): maximize log(u)/w instead (log u < 0)
+        u = np.asarray(jax.random.uniform(key, (n,), minval=1e-12,
+                                          maxval=1.0), np.float64)
+        keys = np.log(u) / w
+        idx = np.sort(np.argpartition(-keys, b - 1)[:b])
+    mind, amin = _min_argmin_bucketed(x, x[idx], metric=metric,
+                                     policy=kernel_policy)
+    acc = np.zeros((b,), np.float32)
+    np.add.at(acc, amin, w)
+    live = acc > 0   # coincident samples can tie to zero mass; drop them
+    return WeightedSummary(points=x[idx[live]].astype(np.float32),
+                           weights=acc[live],
+                           is_candidate=np.zeros(int(live.sum()), bool),
+                           n_rounds=1, total_weight=total,
+                           indices=orig[idx[live]])
+
+
+def _site_summary(x, key, *, k, t, alpha, beta, metric, kernel_policy,
+                  budget=None):
+    from repro.core.rand_summary import rand_summary
+
+    n = int(x.shape[0])
+    b = int(budget) if budget is not None else default_budget(n, k, t)
+    return rand_summary(x, key, budget=max(1, min(b, n)), metric=metric,
+                        policy=kernel_policy)
+
+
+def _record_bound(params, *, k, t, alpha, beta, max_points, leaf_size):
+    b = params.get("budget")
+    if b is not None:
+        return int(b) + 1
+    return default_budget(int(max_points), k, t) + 1
+
+
+register_summarizer(
+    "uniform",
+    summarize=_summarize,
+    site_summary=_site_summary,
+    supports=lambda metric, k, t: True,
+    priority=-1,   # baseline: by name only, never auto-picked
+    record_bound=_record_bound,
+    description="weighted reservoir sample + nearest-sample mass "
+                "(the paper's rand baseline); no outlier candidates",
+    sized=True,
+)
