@@ -1,13 +1,15 @@
-"""Multi-host streaming demo: 4 sites -> trees -> all_gather roots -> model.
+"""Multi-host streaming demo on the Session facade: 4 sites, one config.
 
-An interleaved stream of Gaussian-cluster points (plus planted outliers)
-is round-robined over four site-local merge-and-reduce trees, exactly the
-dispatcher model of the paper.  On the refresh cadence the sites exchange
-only their packed tree roots (one all_gather — the comm cost is printed
-per refresh) and the replicated second-level weighted k-means-- yields one
-global model that every site serves from.  The demo then checkpoints the
-whole topology (per-site trees + model + routing cursor), restores it, and
-shows that restoring onto a different site count is refused.
+The same ``PipelineConfig`` shape as the single-host demo with
+``topology="sharded"`` and a site count — that one-line change swaps the
+engine for ``ShardedStreamService``: an interleaved stream is round-robined
+over site-local merge-and-reduce trees, on the refresh cadence the sites
+exchange only their packed tree roots (one all_gather — the comm cost is
+printed per refresh), and the replicated second-level weighted k-means--
+yields one global model every site serves from.  The demo then checkpoints
+the whole topology through the facade (config embedded), restores it with
+``Session.load``, and shows that restoring onto a different site count is
+refused.
 
     PYTHONPATH=src python examples/sharded_stream.py [--sites 4]
 
@@ -20,9 +22,9 @@ import tempfile
 
 import numpy as np
 
+from repro import Session, ShardedStreamService, pipeline_config
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.synthetic import gauss
-from repro.stream import ShardedServiceConfig, ShardedStreamService
 
 
 def main():
@@ -39,39 +41,40 @@ def main():
     x, out_ids = gauss(n_centers=args.n_centers, per_center=args.per_center,
                        t=args.t, sigma=0.1, seed=args.seed)
     n = x.shape[0]
-    cfg = ShardedServiceConfig(
-        dim=x.shape[1], k=args.n_centers, t=args.t, n_sites=args.sites,
-        leaf_size=1024, refresh_every=max(n // 4, 2048), micro_batch=256,
-        async_refresh=args.async_refresh, seed=args.seed)
-    svc = ShardedStreamService(cfg)
+    cfg = pipeline_config(
+        dim=x.shape[1], k=args.n_centers, t=args.t, topology="sharded",
+        sites=args.sites, leaf_size=1024, refresh_every=max(n // 4, 2048),
+        micro_batch=256, async_refresh=args.async_refresh, seed=args.seed)
+    sess = Session(cfg)
 
     print(f"streaming {n} points over {args.sites} sites "
           f"in batches of {args.batch} ...")
     for i in range(0, n, args.batch):
-        svc.ingest(x[i:i + args.batch])           # round-robin routed
-    svc.join_refresh()
-    svc.refresh()
-    st = svc.last_refresh
-    print(f"  model v{int(svc.model.version)} [{st.path}] from "
+        sess.ingest(x[i:i + args.batch])           # round-robin routed
+    sess.engine.join_refresh()
+    sess.refresh()
+    st = sess.engine.last_refresh
+    print(f"  model v{int(sess.model.version)} [{st.path}] from "
           f"{st.comm_records} gathered root records "
           f"({st.comm_bytes} bytes over one all_gather, "
           f"{st.root_rows} rows/site) — per-site trees: "
-          f"{[tr.total_ingested for tr in svc.trees]} points")
+          f"{[tr.total_ingested for tr in sess.engine.trees]} points")
 
     # mixed queries: a few inliers and one planted outlier
     inliers = np.setdiff1d(np.arange(n), out_ids)[:4]
     q = np.concatenate([x[inliers], x[out_ids[:1]]])
-    for r in svc.score(q):
+    for r in sess.score(q):
         tag = "OUTLIER" if r.is_outlier else "inlier "
         print(f"  req {r.request_id}: center {r.center:2d} "
               f"score {r.outlier_score:8.3f}  {tag} "
               f"({r.latency_s * 1e3:.1f} ms)")
 
     ckpt_dir = tempfile.mkdtemp(prefix="sharded_stream_ckpt_")
-    svc.save(CheckpointManager(ckpt_dir), step=1)
-    print(f"checkpointed {args.sites} site trees to {ckpt_dir}; restoring ...")
-    restored = ShardedStreamService.restore(cfg, CheckpointManager(ckpt_dir))
-    a = svc.score(q)
+    step = sess.save(ckpt_dir)
+    print(f"checkpointed {args.sites} site trees to {ckpt_dir} @ step {step}; "
+          f"restoring from the embedded config ...")
+    restored = Session.load(ckpt_dir)
+    a = sess.score(q)
     b = restored.score(q)
     assert all(p.distance == r.distance and p.center == r.center
                for p, r in zip(a, b)), "restore drifted!"
@@ -80,8 +83,9 @@ def main():
 
     try:
         ShardedStreamService.restore(
-            ShardedServiceConfig(dim=x.shape[1], k=args.n_centers, t=args.t,
-                                 n_sites=args.sites + 1),
+            pipeline_config(
+                dim=x.shape[1], k=args.n_centers, t=args.t,
+                topology="sharded", sites=args.sites + 1).sharded_config(),
             CheckpointManager(ckpt_dir))
     except ValueError as e:
         print(f"  restore onto {args.sites + 1} sites refused: {e}")

@@ -1,10 +1,11 @@
-"""End-to-end streaming demo: ingest -> serve -> checkpoint -> restore.
+"""End-to-end streaming demo on the Session facade.
 
-A stream of Gaussian-cluster points (plus planted outliers) flows into the
-merge-and-reduce summary tree; the serving model refreshes on a cadence;
-queries are answered from micro-batches; then the whole service state is
-checkpointed, restored into a fresh process-equivalent service, and the
-restored service is shown to return *identical* scores.
+One ``PipelineConfig`` describes the whole run (problem, policies, stream
+topology); ``Session`` drives it: points stream in, the serving model
+refreshes on a cadence, queries are answered from micro-batches, then the
+session is checkpointed (config embedded in the manifest), restored with
+``Session.load`` — no caller-side state — and shown to return *identical*
+scores.
 
     PYTHONPATH=src python examples/stream_serve.py
 """
@@ -13,9 +14,8 @@ import tempfile
 
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
+from repro import Session, pipeline_config
 from repro.data.synthetic import gauss
-from repro.stream import ServiceConfig, StreamService
 
 
 def main():
@@ -31,35 +31,38 @@ def main():
     x, out_ids = gauss(n_centers=args.n_centers, per_center=args.per_center,
                        t=args.t, sigma=0.1, seed=args.seed)
     n = x.shape[0]
-    cfg = ServiceConfig(dim=x.shape[1], k=args.n_centers, t=args.t,
-                        leaf_size=2048, refresh_every=max(n // 4, 2048),
-                        micro_batch=256, seed=args.seed)
-    svc = StreamService(cfg)
+    cfg = pipeline_config(
+        dim=x.shape[1], k=args.n_centers, t=args.t, topology="stream",
+        leaf_size=2048, refresh_every=max(n // 4, 2048), micro_batch=256,
+        seed=args.seed)
+    sess = Session(cfg)
 
     print(f"streaming {n} points in batches of {args.batch} ...")
     for i in range(0, n, args.batch):
-        svc.ingest(x[i:i + args.batch])
-    svc.refresh()
-    print(f"  model v{int(svc.model.version)} on "
-          f"{svc.tree.num_records} summary records "
-          f"({len(svc.tree.nodes)} tree nodes, "
-          f"{svc.tree.total_weight:.0f} mass)")
+        sess.ingest(x[i:i + args.batch])
+    sess.refresh()
+    tree = sess.engine.tree
+    print(f"  model v{int(sess.model.version)} on "
+          f"{tree.num_records} summary records "
+          f"({len(tree.nodes)} tree nodes, {tree.total_weight:.0f} mass)")
 
     # mixed queries: a few inliers and one planted outlier
     inliers = np.setdiff1d(np.arange(n), out_ids)[:4]
     q = np.concatenate([x[inliers], x[out_ids[:1]]])
-    results = svc.score(q)
+    results = sess.score(q)
     for r in results:
         tag = "OUTLIER" if r.is_outlier else "inlier "
         print(f"  req {r.request_id}: center {r.center:2d} "
               f"score {r.outlier_score:8.3f}  {tag} "
               f"({r.latency_s * 1e3:.1f} ms)")
-    print(f"  latency: {svc.latency_stats()}")
+    print(f"  latency: {sess.latency_stats()}")
 
     ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="stream_ckpt_")
-    svc.save(CheckpointManager(ckpt_dir), step=1)
-    print(f"checkpointed to {ckpt_dir}; restoring into a fresh service ...")
-    restored = StreamService.restore(cfg, CheckpointManager(ckpt_dir))
+    step = sess.save(ckpt_dir)
+    print(f"checkpointed to {ckpt_dir} @ step {step} (config embedded); "
+          f"restoring from the checkpoint alone ...")
+    restored = Session.load(ckpt_dir)
+    assert restored.config == cfg, "embedded config drifted!"
     results2 = restored.score(q)
     for a, b in zip(results, results2):
         assert a.center == b.center and a.distance == b.distance \
@@ -67,9 +70,9 @@ def main():
     print(f"  restored model v{int(restored.model.version)}: "
           f"{len(results2)} post-restore scores identical")
 
-    restored.ingest(x[: args.batch])   # the restored service keeps serving
-    print(f"  restored service ingested {args.batch} more points "
-          f"(total {restored.tree.total_ingested})")
+    restored.ingest(x[: args.batch])   # the restored session keeps serving
+    print(f"  restored session ingested {args.batch} more points "
+          f"(total {restored.engine.tree.total_ingested})")
     print("ok")
 
 

@@ -1,0 +1,63 @@
+"""Distributed clustering and outlier detection — public API.
+
+The package root re-exports the curated stable surface; ``__all__`` is
+the contract (CI asserts every name resolves).  Four groups:
+
+* **config + session** — ``PipelineConfig`` (declarative, serializable
+  description of a run) and ``Session`` (one verb set over the oneshot /
+  stream / sharded topologies).  Start here: see ``examples/`` and
+  ``python -m repro run --config <file>``.
+* **policies** — ``KernelPolicy`` (compute backend / tile selection) and
+  ``SummarizerPolicy`` (summary algorithm selection), with their
+  process-default installers.
+* **summaries + algorithms** — the paper's objects for callers composing
+  their own pipelines: Summary-Outliers, weighted summaries, the stream
+  tree, k-means--, and the coordinator entry points.
+* **serving + persistence** — the stream services, their configs, the
+  model/result records and the checkpoint manager.
+
+Deeper internals stay importable from their modules (``repro.kernels``,
+``repro.summarize``, ``repro.stream``, ``repro.core``) but only the names
+below are the stable cross-PR surface.
+"""
+from repro.api import (
+    PipelineConfig, ProblemSpec, Session, TOPOLOGIES, TopologySpec,
+    pipeline_config,
+)
+from repro.kernels.dispatch import (
+    KernelPolicy, get_default_policy, set_default_policy, using_policy,
+)
+from repro.summarize import (
+    SummarizerPolicy, get_default_summarizer, registered_summarizers,
+    set_default_summarizer, summarizer_policy, using_summarizer,
+)
+from repro.core import (
+    DistClusterResult, augmented_summary_outliers, distributed_cluster,
+    kmeans_minus_minus, simulate_coordinator, summary_outliers,
+)
+from repro.stream import (
+    BaseServiceConfig, ModelState, QueryResult, ServiceConfig,
+    ShardedServiceConfig, ShardedStreamService, StreamService, StreamTree,
+    TreeConfig, WeightedSummary, weighted_summary_outliers,
+)
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    # config + session
+    "PipelineConfig", "ProblemSpec", "TopologySpec", "TOPOLOGIES",
+    "pipeline_config", "Session",
+    # policies
+    "KernelPolicy", "get_default_policy", "set_default_policy",
+    "using_policy",
+    "SummarizerPolicy", "get_default_summarizer", "set_default_summarizer",
+    "summarizer_policy", "using_summarizer", "registered_summarizers",
+    # summaries + algorithms
+    "summary_outliers", "augmented_summary_outliers",
+    "weighted_summary_outliers", "WeightedSummary", "StreamTree",
+    "TreeConfig", "kmeans_minus_minus", "distributed_cluster",
+    "simulate_coordinator", "DistClusterResult",
+    # serving + persistence
+    "BaseServiceConfig", "ServiceConfig", "ShardedServiceConfig",
+    "StreamService", "ShardedStreamService", "ModelState", "QueryResult",
+    "CheckpointManager",
+]

@@ -1,0 +1,4 @@
+"""``python -m repro`` — run a declarative pipeline config file."""
+from repro.api.cli import main
+
+main()

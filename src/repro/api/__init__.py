@@ -1,0 +1,15 @@
+"""One front door over the pipeline: declarative config + session facade.
+
+``PipelineConfig`` (``config.py``) is the single serializable description
+of a run — problem, summarizer policy, kernel policy, topology — and
+``Session`` (``session.py``) is the single verb set (``fit`` / ``ingest``
+/ ``refresh`` / ``score`` / ``save`` / ``load``) driving
+``distributed_cluster``, ``StreamService`` or ``ShardedStreamService``
+behind it, bit-identical to calling those layers directly.
+``python -m repro`` (``cli.py``) executes a config file.
+"""
+from repro.api.config import (  # noqa: F401
+    PARTITIONS, PipelineConfig, ProblemSpec, SITE_BUDGETS, TOPOLOGIES,
+    TopologySpec, pipeline_config,
+)
+from repro.api.session import OneshotEngine, Session  # noqa: F401

@@ -1,0 +1,346 @@
+"""Declarative pipeline configuration: one artifact describing a whole run.
+
+After PRs 1-4 the repo had four parallel configuration surfaces —
+``distributed_cluster(...)`` kwargs, ``ServiceConfig`` /
+``ShardedServiceConfig`` / ``TreeConfig`` dataclasses, and the
+process-global ``KernelPolicy`` / ``SummarizerPolicy`` defaults — with
+overlapping fields and no way to persist or reproduce a full setup.
+``PipelineConfig`` is the one front door:
+
+* **problem** — what is being clustered: ``dim`` / ``k`` / ``t`` (the
+  paper's z, the outlier budget) / ``metric``;
+* **summarizer** — the :class:`repro.summarize.SummarizerPolicy` selecting
+  the per-site / per-leaf summary algorithm;
+* **kernels** — the :class:`repro.kernels.dispatch.KernelPolicy` selecting
+  compute backends and tile sizes;
+* **topology** — how the data reaches the coordinator: ``oneshot``
+  (Algorithm 3 over a partitioned dataset), ``stream`` (single-host
+  merge-and-reduce tree), or ``sharded`` (one tree per site, gathered
+  roots), with the sites / window / cadence knobs that shape each.
+
+Everything is a frozen dataclass of JSON-scalar fields, validated at
+construction, with an exact ``to_dict`` / ``from_dict`` / JSON round-trip
+(``from_dict(to_dict(c)) == c``, including through ``json.dumps``), so a
+configuration is a reproducible artifact: checkpoint manifests embed it,
+``python -m repro`` executes it from a file, and swapping the summarizer,
+metric or topology is a one-line change to the artifact — not a rewrite
+against a different API.
+
+The existing layer configs are *derived views*: :meth:`service_config` /
+:meth:`sharded_config` project a ``PipelineConfig`` onto the stream-layer
+dataclasses (which share one ``BaseServiceConfig``), and the oneshot
+topology maps onto ``distributed_cluster`` / ``simulate_coordinator``
+kwargs — bit-identical to calling those layers directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.kernels.dispatch import (KernelPolicy, get_default_policy,
+                                    BACKENDS)
+from repro.kernels.pdist.ref import METRICS
+from repro.stream.service import ServiceConfig
+from repro.stream.sharded import ShardedServiceConfig
+from repro.summarize.base import (SummarizerPolicy, get_default_summarizer,
+                                  select_summarizer)
+
+TOPOLOGIES = ("oneshot", "stream", "sharded")
+PARTITIONS = ("random", "adversarial")
+SITE_BUDGETS = ("full", "paper")
+
+_CONFIG_VERSION = 1
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def _int_field(name: str, v, lo: int) -> None:
+    _require(isinstance(v, int) and not isinstance(v, bool) and v >= lo,
+             f"{name} must be an int >= {lo}, got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """What is being clustered: (k, t)-means/median with outliers in R^dim."""
+
+    dim: int
+    k: int
+    t: int                  # outlier budget (the paper's z)
+    metric: str = "l2sq"
+
+    def __post_init__(self):
+        _int_field("problem.dim", self.dim, 1)
+        _int_field("problem.k", self.k, 1)
+        _int_field("problem.t", self.t, 0)
+        _require(self.metric in METRICS,
+                 f"problem.metric must be one of {METRICS}, "
+                 f"got {self.metric!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """How data reaches the coordinator; knobs outside a kind's column must
+    stay at their defaults (a windowed oneshot or a 3-site stream is a
+    configuration error, not a silently-ignored field)."""
+
+    kind: str = "oneshot"            # oneshot | stream | sharded
+    sites: int = 1                   # oneshot partitions / sharded sites
+    window: Optional[int] = None     # stream/sharded sliding window (raw pts)
+    refresh_every: int = 8192        # stream/sharded model cadence (raw pts)
+    leaf_size: int = 2048            # stream/sharded tree leaf
+    micro_batch: int = 256           # scoring batch shape (all kinds)
+    async_refresh: bool = False      # stream/sharded double-buffered refresh
+    partition: str = "random"        # oneshot per-site budget mode
+    site_budget: str = "full"        # sharded per-site root budget
+    use_shard_map: bool = False      # oneshot/sharded: real collective
+
+    def __post_init__(self):
+        _require(self.kind in TOPOLOGIES,
+                 f"topology.kind must be one of {TOPOLOGIES}, "
+                 f"got {self.kind!r}")
+        _int_field("topology.sites", self.sites, 1)
+        _int_field("topology.refresh_every", self.refresh_every, 1)
+        _int_field("topology.leaf_size", self.leaf_size, 1)
+        _int_field("topology.micro_batch", self.micro_batch, 1)
+        if self.window is not None:
+            _int_field("topology.window", self.window, 1)
+        _require(self.partition in PARTITIONS,
+                 f"topology.partition must be one of {PARTITIONS}, "
+                 f"got {self.partition!r}")
+        _require(self.site_budget in SITE_BUDGETS,
+                 f"topology.site_budget must be one of {SITE_BUDGETS}, "
+                 f"got {self.site_budget!r}")
+        if self.kind == "oneshot":
+            _require(self.window is None,
+                     "topology.window is a stream/sharded knob; a oneshot "
+                     "run has no stream to window")
+            _require(not self.async_refresh,
+                     "topology.async_refresh is a stream/sharded knob")
+            for name in ("refresh_every", "leaf_size"):
+                default = type(self).__dataclass_fields__[name].default
+                _require(getattr(self, name) == default,
+                         f"topology.{name} is a stream/sharded tree knob; "
+                         f"a oneshot run clusters everything in one pass "
+                         f"(leave it at the default, {default})")
+        if self.kind == "stream":
+            _require(self.sites == 1,
+                     "topology.sites > 1 needs kind='sharded' "
+                     "(a single-host stream has exactly one site)")
+            _require(not self.use_shard_map,
+                     "topology.use_shard_map is a oneshot/sharded knob")
+        if self.kind != "oneshot":
+            _require(self.partition == "random",
+                     "topology.partition is a oneshot knob")
+        if self.kind != "sharded":
+            _require(self.site_budget == "full",
+                     "topology.site_budget is a sharded knob")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """The one declarative description of a clustering pipeline.
+
+    ``summarizer`` / ``kernels`` default to the process-wide policies
+    *captured at construction* (same rule as the stream configs), so a
+    serialized config is always concrete — ``to_dict`` never emits a
+    "whatever the process default happens to be" placeholder.
+    """
+
+    problem: ProblemSpec
+    topology: TopologySpec = TopologySpec()
+    summarizer: Optional[SummarizerPolicy] = None
+    kernels: Optional[KernelPolicy] = None
+    second_iters: int = 25           # second-level k-means-- iterations
+    seed: int = 0
+
+    def __post_init__(self):
+        _require(isinstance(self.problem, ProblemSpec),
+                 f"problem must be a ProblemSpec, got {self.problem!r}")
+        _require(isinstance(self.topology, TopologySpec),
+                 f"topology must be a TopologySpec, got {self.topology!r}")
+        if self.summarizer is None:
+            object.__setattr__(self, "summarizer", get_default_summarizer())
+        if self.kernels is None:
+            object.__setattr__(self, "kernels", get_default_policy())
+        _int_field("second_iters", self.second_iters, 1)
+        _require(isinstance(self.seed, int) and not isinstance(self.seed, bool),
+                 f"seed must be an int, got {self.seed!r}")
+        # the summarizer must actually serve this problem (an explicit name
+        # that cannot is a config error now, not a runtime surprise later) ...
+        p = self.problem
+        spec = select_summarizer(self.summarizer, metric=p.metric,
+                                 k=p.k, t=p.t)
+        # ... and a shard_map oneshot additionally needs its fixed-shape
+        # site path (host-driven summarizers only run host-simulated)
+        if self.topology.kind == "oneshot" and self.topology.use_shard_map:
+            _require(spec.site_summary is not None,
+                     f"summarizer {spec.name!r} is host-driven (no "
+                     f"fixed-shape site path) and cannot run under "
+                     f"topology.use_shard_map; drop use_shard_map to run "
+                     f"it host-simulated")
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """Exact, JSON-scalar dict image (``from_dict`` inverts it)."""
+        return {
+            "version": _CONFIG_VERSION,
+            "problem": dataclasses.asdict(self.problem),
+            "topology": dataclasses.asdict(self.topology),
+            "summarizer": {
+                "name": self.summarizer.name,
+                "params": [[k, v] for k, v in self.summarizer.params],
+            },
+            "kernels": dataclasses.asdict(self.kernels),
+            "second_iters": self.second_iters,
+            "seed": self.seed,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineConfig":
+        """Inverse of :meth:`to_dict`; unknown or missing keys raise."""
+        if not isinstance(d, dict):
+            raise ValueError(f"expected a config dict, got {type(d).__name__}")
+        d = dict(d)
+        version = d.pop("version", _CONFIG_VERSION)
+        if version != _CONFIG_VERSION:
+            raise ValueError(
+                f"config version {version!r} is not supported "
+                f"(this build reads version {_CONFIG_VERSION})")
+        try:
+            problem = d.pop("problem")
+            topology = d.pop("topology", {})
+            summarizer = d.pop("summarizer", None)
+            kernels = d.pop("kernels", None)
+            second_iters = d.pop("second_iters", 25)
+            seed = d.pop("seed", 0)
+        except KeyError as e:
+            raise ValueError(f"config is missing required section {e}")
+        if d:
+            raise ValueError(f"unknown config keys {sorted(d)}; expected "
+                             f"problem/topology/summarizer/kernels/"
+                             f"second_iters/seed")
+        return cls(
+            problem=_spec_from(ProblemSpec, "problem", problem),
+            topology=_spec_from(TopologySpec, "topology", topology),
+            summarizer=_summarizer_from(summarizer),
+            kernels=_kernels_from(kernels),
+            second_iters=second_iters,
+            seed=seed,
+        )
+
+    def to_json(self, *, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_json(cls, text: str) -> "PipelineConfig":
+        return cls.from_dict(json.loads(text))
+
+    # --------------------------------------------------------- derived views
+    def service_config(self) -> ServiceConfig:
+        """Project onto the single-host stream layer (kind == 'stream')."""
+        _require(self.topology.kind == "stream",
+                 f"service_config() needs topology.kind='stream', "
+                 f"got {self.topology.kind!r}")
+        return ServiceConfig(**self._base_service_kwargs())
+
+    def sharded_config(self) -> ShardedServiceConfig:
+        """Project onto the multi-host stream layer (kind == 'sharded')."""
+        _require(self.topology.kind == "sharded",
+                 f"sharded_config() needs topology.kind='sharded', "
+                 f"got {self.topology.kind!r}")
+        return ShardedServiceConfig(
+            **self._base_service_kwargs(),
+            n_sites=self.topology.sites,
+            site_budget=self.topology.site_budget,
+            use_shard_map=self.topology.use_shard_map,
+        )
+
+    def _base_service_kwargs(self) -> dict:
+        p, topo = self.problem, self.topology
+        return dict(
+            dim=p.dim, k=p.k, t=p.t, metric=p.metric,
+            leaf_size=topo.leaf_size, refresh_every=topo.refresh_every,
+            micro_batch=topo.micro_batch, second_iters=self.second_iters,
+            policy=self.kernels, summarizer=self.summarizer,
+            window=topo.window, async_refresh=topo.async_refresh,
+            seed=self.seed)
+
+
+def _spec_from(cls, section: str, d) -> object:
+    if not isinstance(d, dict):
+        raise ValueError(f"config section {section!r} must be a dict, "
+                         f"got {d!r}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"unknown {section} keys {sorted(unknown)}; "
+                         f"expected a subset of {sorted(known)}")
+    return cls(**d)
+
+
+def _summarizer_from(d) -> Optional[SummarizerPolicy]:
+    if d is None or isinstance(d, SummarizerPolicy):
+        return d
+    if isinstance(d, str):
+        return SummarizerPolicy(d)
+    if not isinstance(d, dict) or set(d) - {"name", "params"}:
+        raise ValueError(f"summarizer must be a name or a "
+                         f"{{name, params}} dict, got {d!r}")
+    params = d.get("params", ())
+    try:
+        pairs = tuple((str(k), v) for k, v in params)
+    except (TypeError, ValueError):
+        raise ValueError(f"summarizer params must be [key, value] pairs, "
+                         f"got {params!r}")
+    return SummarizerPolicy(d.get("name", "auto"), pairs)
+
+
+def _kernels_from(d) -> Optional[KernelPolicy]:
+    if d is None or isinstance(d, KernelPolicy):
+        return d
+    if isinstance(d, str):
+        return KernelPolicy(backend=d)
+    if not isinstance(d, dict) or set(d) - {"backend", "block_n", "autotune"}:
+        raise ValueError(f"kernels must be a backend name in {BACKENDS} or a "
+                         f"{{backend, block_n, autotune}} dict, got {d!r}")
+    return KernelPolicy(backend=d.get("backend", "auto"),
+                        block_n=d.get("block_n"),
+                        autotune=bool(d.get("autotune", False)))
+
+
+def pipeline_config(
+    *,
+    dim: int,
+    k: int,
+    t: int,
+    metric: str = "l2sq",
+    topology: str = "oneshot",
+    summarizer=None,
+    kernels=None,
+    second_iters: int = 25,
+    seed: int = 0,
+    **topology_kwargs,
+) -> PipelineConfig:
+    """Flat-keyword constructor — the ergonomic front door.
+
+    ``topology`` is the kind; any remaining keywords are ``TopologySpec``
+    fields (``sites=``, ``window=``, ``refresh_every=``, ...).
+    ``summarizer`` / ``kernels`` also accept bare names
+    (``summarizer="coreset"``, ``kernels="pallas"``).
+
+        cfg = pipeline_config(dim=5, k=20, t=500, topology="sharded",
+                              sites=4, window=100_000)
+    """
+    return PipelineConfig(
+        problem=ProblemSpec(dim=dim, k=k, t=t, metric=metric),
+        topology=_spec_from(TopologySpec, "topology",
+                            {"kind": topology, **topology_kwargs}),
+        summarizer=_summarizer_from(summarizer),
+        kernels=_kernels_from(kernels),
+        second_iters=second_iters,
+        seed=seed,
+    )

@@ -57,6 +57,14 @@ class CheckpointManager:
         leaves (e.g. the sharded stream service records its site count so a
         checkpoint cannot be silently restored onto a different topology).
         Read it back with `read_meta`."""
+        try:
+            # validate on the caller's thread (a bad meta on a non-blocking
+            # save would otherwise die silently on the writer thread) and
+            # normalize to the JSON image, so read_meta returns exactly what
+            # a restorer will see (tuples become lists here, not at read).
+            meta = json.loads(json.dumps(meta or {}))
+        except (TypeError, ValueError) as e:
+            raise TypeError(f"checkpoint meta is not JSON-serializable: {e}")
         leaves, treedef = _flatten(tree)
         # device -> host copy happens here (synchronously w.r.t. the arrays'
         # readiness) so training can donate/overwrite them right after.

@@ -87,8 +87,8 @@ def augmented_summary_outliers(
     beta: float = 0.45,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
-    block_n: Optional[int] = None,      # deprecated alias
-    use_pallas: Optional[bool] = None,  # deprecated alias
+    block_n: Optional[int] = None,      # removed alias: raises TypeError
+    use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ) -> Summary:
     policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
                             caller="augmented_summary_outliers")

@@ -54,8 +54,8 @@ def kmeans_minus_minus(
     iters: int = 25,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
-    block_n: Optional[int] = None,      # deprecated alias
-    use_pallas: Optional[bool] = None,  # deprecated alias
+    block_n: Optional[int] = None,      # removed alias: raises TypeError
+    use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ) -> OutlierClustering:
     policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
                             caller="kmeans_minus_minus")

@@ -91,8 +91,8 @@ def summary_outliers(
     beta: float = 0.45,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
-    block_n: Optional[int] = None,      # deprecated alias
-    use_pallas: Optional[bool] = None,  # deprecated alias
+    block_n: Optional[int] = None,      # removed alias: raises TypeError
+    use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ) -> Summary:
     """Fixed-shape Summary-Outliers (Algorithm 1). jit/shard_map friendly."""
     policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,

@@ -28,9 +28,10 @@ Resolution happens at trace time (shapes are concrete under ``jax.jit``),
 so a jitted caller taking ``policy`` as a static argument compiles exactly
 one registry decision per (shape, policy) — no runtime branching.
 
-Deprecated ``use_pallas=``/``block_n=`` keyword aliases at the public API
-edges route through :func:`resolve_policy`, which emits a single
-``DeprecationWarning`` and builds the equivalent policy.
+The pre-registry ``use_pallas=``/``block_n=`` keyword aliases survived one
+release as deprecated warnings at the public API edges; they are now
+removed — :func:`resolve_policy` raises a ``TypeError`` pointing at
+``KernelPolicy`` when either is passed.
 """
 from __future__ import annotations
 
@@ -39,7 +40,6 @@ import dataclasses
 import json
 import os
 import time
-import warnings
 from pathlib import Path
 from typing import Callable, NamedTuple, Optional, Sequence
 
@@ -75,6 +75,11 @@ class KernelPolicy:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; expected one of {BACKENDS}")
+        bn = self.block_n
+        if bn is not None and (not isinstance(bn, int)
+                               or isinstance(bn, bool) or bn < 1):
+            raise ValueError(
+                f"block_n must be None or an int >= 1, got {bn!r}")
 
 
 class Registration(NamedTuple):
@@ -167,27 +172,21 @@ def resolve_policy(
     block_n: Optional[int] = None,
     caller: str = "",
 ) -> KernelPolicy:
-    """Fold the deprecated ``use_pallas=``/``block_n=`` aliases into a policy.
+    """Resolve ``policy`` (default: the process policy) at a public edge.
 
-    With neither alias set, returns ``policy`` (or the process default).
-    With an alias set, emits one ``DeprecationWarning`` and builds the
-    equivalent policy: ``use_pallas=True`` -> backend "pallas",
-    ``use_pallas=False`` (or only ``block_n``) -> backend "blocked" — the
-    exact pre-registry semantics.
+    The pre-registry ``use_pallas=``/``block_n=`` keyword aliases were
+    deprecated for one release and are now removed: passing either raises
+    a ``TypeError`` naming the replacement (``use_pallas=True`` was
+    ``KernelPolicy(backend="pallas")``; ``block_n=N`` was
+    ``KernelPolicy(backend="blocked", block_n=N)``).
     """
-    if use_pallas is None and block_n is None:
-        return policy if policy is not None else get_default_policy()
-    if policy is not None:
+    if use_pallas is not None or block_n is not None:
         raise TypeError(
-            f"{caller or 'this function'} got both policy= and the "
-            f"deprecated use_pallas=/block_n= aliases; pass only policy=")
-    warnings.warn(
-        f"{caller or 'kernel op'}: use_pallas=/block_n= are deprecated; "
-        f"pass policy=KernelPolicy(backend=..., block_n=...) or call "
-        f"set_default_policy() once",
-        DeprecationWarning, stacklevel=3)
-    return KernelPolicy(backend="pallas" if use_pallas else "blocked",
-                        block_n=block_n)
+            f"{caller or 'kernel op'}: the use_pallas=/block_n= keyword "
+            f"aliases were removed; pass "
+            f"policy=KernelPolicy(backend=..., block_n=...) or install a "
+            f"process default with set_default_policy()")
+    return policy if policy is not None else get_default_policy()
 
 
 # ----------------------------------------------------------------- resolution

@@ -102,7 +102,7 @@ def lloyd_step(
     *,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
-    use_pallas: Optional[bool] = None,  # deprecated alias
+    use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ):
     """Returns (sums (k,d), counts (k,), assignment (n,), dist (n,))."""
     policy = dispatch.resolve_policy(policy, use_pallas=use_pallas,

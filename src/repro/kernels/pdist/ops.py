@@ -17,8 +17,9 @@ default.  All paths agree with ``ref.min_argmin_ref`` (tested in
 tests/test_kernels.py and tests/test_dispatch.py, incl. interpret=True
 kernel sweeps).
 
-The ``use_pallas=``/``block_n=`` keyword aliases are deprecated; they emit
-a ``DeprecationWarning`` and route through the same registry.
+The pre-registry ``use_pallas=``/``block_n=`` keyword aliases are removed;
+passing either raises a ``TypeError`` naming the ``KernelPolicy``
+replacement.
 """
 from __future__ import annotations
 
@@ -119,8 +120,8 @@ def min_argmin(
     *,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
-    block_n: Optional[int] = None,      # deprecated alias
-    use_pallas: Optional[bool] = None,  # deprecated alias
+    block_n: Optional[int] = None,      # removed alias: raises TypeError
+    use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ):
     """For each row of ``x`` (n, d): distance to nearest row of ``c`` (m, d)
     and its index. Returns (dist (n,), idx (n,) int32).

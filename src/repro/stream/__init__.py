@@ -70,8 +70,8 @@ from repro.stream.weighted import (  # noqa: F401
 )
 from repro.stream.tree import StreamTree, TreeConfig, record_cap  # noqa: F401
 from repro.stream.service import (  # noqa: F401
-    ModelState, QueryResult, ServiceConfig, ServingFrontEnd, StreamService,
-    fit_model,
+    BaseServiceConfig, ModelState, QueryResult, ServiceConfig,
+    ServingFrontEnd, StreamService, fit_model,
 )
 from repro.stream.sharded import (  # noqa: F401
     RefreshStats, ShardedServiceConfig, ShardedStreamService,

@@ -57,7 +57,15 @@ from repro.summarize.base import SummarizerPolicy, get_default_summarizer
 
 
 @dataclasses.dataclass(frozen=True)
-class ServiceConfig:
+class BaseServiceConfig:
+    """Fields shared by every serving front end (single-host and sharded).
+
+    ``ShardedServiceConfig`` extends this with its topology-only knobs
+    (site count, per-site budget, collective path) instead of repeating
+    the common fields — ``tests/test_api.py`` asserts the two configs
+    stay field-compatible through this base.
+    """
+
     dim: int
     k: int
     t: int
@@ -81,6 +89,9 @@ class ServiceConfig:
         if self.summarizer is None:
             object.__setattr__(self, "summarizer", get_default_summarizer())
 
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig(BaseServiceConfig):
     def tree_config(self) -> TreeConfig:
         return TreeConfig(
             dim=self.dim, k=self.k, t=self.t, leaf_size=self.leaf_size,
@@ -399,9 +410,12 @@ class StreamService(ServingFrontEnd):
         }
 
     def save(self, manager: CheckpointManager, step: int, *,
-             blocking: bool = True) -> None:
+             blocking: bool = True, extra_meta: Optional[dict] = None) -> None:
+        """``extra_meta``: caller facts merged into the manifest meta (the
+        ``Session`` facade embeds its serialized ``PipelineConfig`` here so
+        a checkpoint is restorable without caller-side state)."""
         manager.save(step, self._state(), blocking=blocking,
-                     meta={"format": "stream-service-v1"})
+                     meta={**(extra_meta or {}), "format": "stream-service-v1"})
 
     @classmethod
     def restore(cls, cfg: ServiceConfig, manager: CheckpointManager,

@@ -56,41 +56,22 @@ from repro.core.collective import (gather_sites, gathered_bytes,
                                    payload_bytes, replicated_coordinator,
                                    sites_mesh)
 from repro.core.distributed import local_budget
-from repro.kernels.dispatch import KernelPolicy, get_default_policy
-from repro.stream.service import ModelState, ServingFrontEnd, fit_model
+from repro.stream.service import (BaseServiceConfig, ModelState,
+                                  ServingFrontEnd, fit_model)
 from repro.stream.tree import StreamTree, TreeConfig
 from repro.stream.weighted import _bucket
-from repro.summarize.base import SummarizerPolicy, get_default_summarizer
 
 
 @dataclasses.dataclass(frozen=True)
-class ShardedServiceConfig:
-    dim: int
-    k: int
-    t: int
+class ShardedServiceConfig(BaseServiceConfig):
+    """``BaseServiceConfig`` (all serving knobs, incl. ``refresh_every`` and
+    ``window`` which are GLOBAL raw-point counts here) plus the multi-host
+    topology fields only the sharded service has."""
+
     n_sites: int = 4
-    leaf_size: int = 2048
-    refresh_every: int = 8192        # GLOBAL raw points between refreshes
-    micro_batch: int = 256
-    second_iters: int = 25
-    metric: str = "l2sq"
-    # None = capture the process default (set_default_policy) at construction
-    policy: Optional[KernelPolicy] = None
-    # None = capture the process default (set_default_summarizer); every
-    # site's tree runs the same summary algorithm
-    summarizer: Optional[SummarizerPolicy] = None
-    window: Optional[int] = None     # global raw points; split over sites
     site_budget: str = "full"        # "full": t per site (window/adversarial
     #                                  safe); "paper": 2t/s (cheaper roots)
-    async_refresh: bool = False
     use_shard_map: bool = False      # real collective when devices allow
-    seed: int = 0
-
-    def __post_init__(self):
-        if self.policy is None:
-            object.__setattr__(self, "policy", get_default_policy())
-        if self.summarizer is None:
-            object.__setattr__(self, "summarizer", get_default_summarizer())
 
     def site_t(self) -> int:
         if self.site_budget == "full":
@@ -276,9 +257,12 @@ class ShardedStreamService(ServingFrontEnd):
         }
 
     def save(self, manager: CheckpointManager, step: int, *,
-             blocking: bool = True) -> None:
+             blocking: bool = True, extra_meta: Optional[dict] = None) -> None:
+        """``extra_meta``: caller facts merged into the manifest meta (the
+        ``Session`` facade embeds its serialized ``PipelineConfig`` here)."""
         manager.save(step, self._state(), blocking=blocking,
-                     meta={"format": "sharded-stream-v1",
+                     meta={**(extra_meta or {}),
+                           "format": "sharded-stream-v1",
                            "n_sites": self.cfg.n_sites})
 
     @classmethod

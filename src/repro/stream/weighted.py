@@ -125,8 +125,8 @@ def weighted_summary_outliers(
     beta: float = 0.45,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
-    block_n: Optional[int] = None,      # deprecated alias
-    use_pallas: Optional[bool] = None,  # deprecated alias
+    block_n: Optional[int] = None,      # removed alias: raises TypeError
+    use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ) -> WeightedSummary:
     """Weighted Summary-Outliers over records (points[i], weights[i])."""
     from repro.summarize.base import clean_weighted_input, empty_summary

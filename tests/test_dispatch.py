@@ -14,9 +14,9 @@ Parity contract (the acceptance bar for any new backend):
 Plus: auto selection picks blocked off-TPU, explicit-but-unsupported
 backends fall back the way the old inline dispatch did, the process-wide
 default policy threads into jitted callers, the autotuner caches its
-measured ``block_n`` under ``$REPRO_KERNELS_CACHE``, and the deprecated
-``use_pallas=``/``block_n=`` aliases still work (with a
-``DeprecationWarning``) and route to the same registry path.
+measured ``block_n`` under ``$REPRO_KERNELS_CACHE``, and the removed
+``use_pallas=``/``block_n=`` aliases raise a ``TypeError`` pointing at
+``KernelPolicy`` from every public edge.
 """
 import json
 
@@ -278,31 +278,42 @@ def test_autotune_policy_resolves_block_n(tmp_path, monkeypatch):
         dispatch.clear_autotune_cache()
 
 
-# ------------------------------------------------------------ deprecation
-def test_summary_outliers_use_pallas_alias_warns_and_matches_policy():
+# ------------------------------------------------- removed legacy aliases
+def test_removed_aliases_raise_type_error_at_every_public_edge():
+    """The PR-3 deprecation window is over: every public edge that carried
+    ``use_pallas=``/``block_n=`` now raises a TypeError that names the
+    ``KernelPolicy`` replacement instead of warning."""
+    from repro.core.augmented import augmented_summary_outliers
+    from repro.core.kmeans_mm import kmeans_minus_minus
     from repro.core.summary import summary_outliers
-    x = jnp.asarray(np.random.default_rng(1).normal(size=(300, 3)), jnp.float32)
+    from repro.stream.weighted import weighted_summary_outliers
+
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 3)), jnp.float32)
+    w = jnp.ones((64,), jnp.float32)
     key = jax.random.key(11)
-    with pytest.warns(DeprecationWarning, match="use_pallas=/block_n="):
-        legacy = summary_outliers(x, key, k=3, t=5, use_pallas=True)
-    modern = summary_outliers(x, key, k=3, t=5,
-                              policy=KernelPolicy(backend="pallas"))
-    # same registry path, same key: bit-identical summaries
-    for a, b in zip(legacy, modern):
-        assert (np.asarray(a) == np.asarray(b)).all()
+    edges = [
+        lambda: summary_outliers(x, key, k=3, t=5, use_pallas=True),
+        lambda: augmented_summary_outliers(x, key, k=3, t=8, block_n=64),
+        lambda: kmeans_minus_minus(x, w, w > 0, key, k=3, t=5.0,
+                                   use_pallas=False),
+        lambda: weighted_summary_outliers(x, w, key, k=3, t=5, block_n=128),
+        lambda: min_argmin(x, x[:4], block_n=128),
+        lambda: lloyd_step(x, w, x[:4], use_pallas=True),
+    ]
+    for edge in edges:
+        with pytest.raises(TypeError, match="KernelPolicy"):
+            edge()
 
 
-def test_block_n_alias_routes_to_blocked_backend():
-    x, c, _ = _data(500, 20, 6)
-    with pytest.warns(DeprecationWarning):
-        d1, a1 = min_argmin(x, c, block_n=128)
-    d2, a2 = min_argmin(x, c, policy=KernelPolicy(backend="blocked",
-                                                  block_n=128))
-    assert (np.asarray(d1) == np.asarray(d2)).all()
-    assert (np.asarray(a1) == np.asarray(a2)).all()
-
-
-def test_policy_plus_alias_is_an_error():
+def test_policy_plus_alias_is_still_an_error():
     x, c, _ = _data(10, 2, 2)
-    with pytest.raises(TypeError, match="deprecated"):
+    with pytest.raises(TypeError, match="removed"):
         min_argmin(x, c, policy=KernelPolicy(), block_n=64)
+
+
+def test_kernel_policy_validates_block_n():
+    for bad in (0, -1, True, 2.5):
+        with pytest.raises(ValueError, match="block_n"):
+            KernelPolicy(block_n=bad)
+    assert KernelPolicy(block_n=None).block_n is None
+    assert KernelPolicy(block_n=64).block_n == 64
