@@ -1,0 +1,168 @@
+"""Validate a ``repro.obs`` metrics snapshot against the checked-in schema.
+
+The snapshot dict returned by ``Session.stats()`` (and emitted by
+``python -m repro stats`` / ``serve --metrics-interval``) is a cross-PR
+surface: dashboards and the Prometheus renderer parse it.  The CI
+obs-smoke job produces a snapshot from a real run and feeds it here; the
+gate fails if the shape drifted from ``benchmarks/obs_schema.json`` or if
+the snapshot's internal invariants break:
+
+  * bucket counts are cumulative, hence non-decreasing in ``le`` order,
+    and the ``+Inf`` bucket equals ``count``;
+  * percentiles are ordered: p50 <= p95 <= p99 (when present);
+  * ``min <= p50 <= max``;
+  * every metric key parses as ``name`` or ``name{k=v,...}``.
+
+``--require PREFIX`` (repeatable) additionally asserts that at least one
+metric key starts with the prefix — the job lists the series every layer
+must contribute (serve latency, refresh phases, comm counters, kernel
+dispatch, checkpoint durations), which is the acceptance criterion "one
+snapshot covers every layer" kept true by CI.
+
+The validator interprets the (small) subset of JSON Schema the schema
+file uses — type / required / properties / additionalProperties / const /
+minimum — with stdlib only, because the container has no jsonschema
+package and must not grow one.
+
+    PYTHONPATH=src python benchmarks/check_obs_snapshot.py \
+        --snapshot snap.json [--schema benchmarks/obs_schema.json] \
+        [--require "serve.latency"] [--require "comm.records"]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "integer": int,
+    "number": (int, float),
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _type_ok(value, names) -> bool:
+    names = [names] if isinstance(names, str) else names
+    for name in names:
+        py = _TYPES[name]
+        if isinstance(value, py):
+            # bool is an int subclass; don't let it satisfy numeric types
+            if name in ("integer", "number") and isinstance(value, bool):
+                continue
+            return True
+    return False
+
+
+def validate(value, schema: dict, path: str = "$") -> list[str]:
+    """Errors from checking ``value`` against the schema subset."""
+    errs: list[str] = []
+    if "const" in schema and value != schema["const"]:
+        errs.append(f"{path}: expected const {schema['const']!r}, "
+                    f"got {value!r}")
+    if "type" in schema and not _type_ok(value, schema["type"]):
+        errs.append(f"{path}: expected type {schema['type']}, "
+                    f"got {type(value).__name__}")
+        return errs   # structural checks below assume the right type
+    if "minimum" in schema and isinstance(value, (int, float)) \
+            and not isinstance(value, bool) and value < schema["minimum"]:
+        errs.append(f"{path}: {value} < minimum {schema['minimum']}")
+    if isinstance(value, dict):
+        for req in schema.get("required", ()):
+            if req not in value:
+                errs.append(f"{path}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties")
+        for k, v in value.items():
+            if k in props:
+                errs.extend(validate(v, props[k], f"{path}.{k}"))
+            elif isinstance(extra, dict):
+                errs.extend(validate(v, extra, f"{path}.{k}"))
+    return errs
+
+
+def _parse_key(key: str) -> bool:
+    if "{" not in key:
+        return bool(key) and "}" not in key
+    if not key.endswith("}"):
+        return False
+    name, rest = key.split("{", 1)
+    return bool(name) and all("=" in pair
+                              for pair in rest[:-1].split(","))
+
+
+def semantic_checks(snap: dict) -> list[str]:
+    """Invariants the schema language cannot express."""
+    errs: list[str] = []
+    for section in ("counters", "gauges", "histograms"):
+        for key in snap.get(section, {}):
+            if not _parse_key(key):
+                errs.append(f"{section}: malformed metric key {key!r}")
+    for key, h in snap.get("histograms", {}).items():
+        buckets = h.get("buckets", {})
+        finite = [(float(le), c) for le, c in buckets.items()
+                  if le != "+Inf"]
+        finite.sort()
+        counts = [c for _, c in finite] + [buckets.get("+Inf", 0)]
+        if any(a > b for a, b in zip(counts, counts[1:])):
+            errs.append(f"{key}: cumulative bucket counts decrease")
+        if buckets.get("+Inf") != h.get("count"):
+            errs.append(f"{key}: +Inf bucket {buckets.get('+Inf')} != "
+                        f"count {h.get('count')}")
+        p50, p95, p99 = h.get("p50"), h.get("p95"), h.get("p99")
+        if None not in (p50, p95, p99) and not p50 <= p95 <= p99:
+            errs.append(f"{key}: percentiles out of order "
+                        f"({p50}, {p95}, {p99})")
+        lo, hi = h.get("min"), h.get("max")
+        if None not in (lo, hi, p50) and not lo <= p50 <= hi:
+            errs.append(f"{key}: p50 {p50} outside [min {lo}, max {hi}]")
+    return errs
+
+
+def require_prefixes(snap: dict, prefixes: list[str]) -> list[str]:
+    errs = []
+    keys = [k for section in ("counters", "gauges", "histograms")
+            for k in snap.get(section, {})]
+    for prefix in prefixes:
+        if not any(k.startswith(prefix) for k in keys):
+            errs.append(f"required metric prefix {prefix!r}: no series "
+                        f"matches")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snapshot", required=True,
+                    help="JSON snapshot file (Session.stats() dump)")
+    ap.add_argument("--schema",
+                    default=str(_ROOT / "benchmarks" / "obs_schema.json"))
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="PREFIX",
+                    help="fail unless some metric key starts with PREFIX "
+                         "(repeatable)")
+    args = ap.parse_args()
+    snap = json.loads(Path(args.snapshot).read_text())
+    schema = json.loads(Path(args.schema).read_text())
+    errs = (validate(snap, schema) + semantic_checks(snap)
+            + require_prefixes(snap, args.require))
+    for e in errs:
+        print(f"FAIL {e}")
+    if errs:
+        print(f"obs snapshot gate FAILED ({len(errs)} problems)",
+              file=sys.stderr)
+        return 1
+    n = sum(len(snap.get(s, {}))
+            for s in ("counters", "gauges", "histograms"))
+    print(f"obs snapshot gate passed ({n} series, "
+          f"{len(args.require)} required prefixes present)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

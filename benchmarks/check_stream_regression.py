@@ -24,7 +24,11 @@ a PR cannot silently trade away streaming model quality:
                                   selection landing on Pallas interpret
                                   mode), not machine-speed noise.  The
                                   section itself is required — a bench run
-                                  without it fails the gate.
+                                  without it fails the gate;
+  * ``obs_overhead_frac_max``   — ceiling on the telemetry plane's ingest
+                                  slowdown (``"obs"`` section of the bench:
+                                  metrics-on vs metrics-off throughput) —
+                                  instrumentation must stay ~free.
 
 With any ``summarize_*`` key present the gate also reads
 ``BENCH_summarize.json`` (benchmarks/summarizer_bench.py) and checks, per
@@ -89,6 +93,15 @@ def check(bench: dict, thr: dict) -> list[str]:
             if measured == 0:
                 print(f"FAIL kernels.{op}: no backend measured")
                 failures.append(f"kernels.{op}")
+    ob = bench.get("obs")
+    if "obs_overhead_frac_max" in thr:
+        if ob is None:
+            print("FAIL obs: section missing from bench output "
+                  "(instrumentation overhead unmeasured)")
+            failures.append("obs_section")
+        else:
+            gate("obs_overhead_frac", float(ob["overhead_frac"]),
+                 thr["obs_overhead_frac_max"])
     sh = bench.get("sharded")
     if sh is not None:
         gate("sharded_cost_ratio", float(sh["cost_ratio"]),

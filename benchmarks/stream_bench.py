@@ -24,6 +24,11 @@ The result always carries a ``"kernels"`` section: per-backend
 alongside the service-level ones.  ``benchmarks/roofline.py --kernels``
 annotates the same section with arithmetic-intensity/roofline terms.
 
+An ``"obs"`` section measures the telemetry plane's cost: best-of-3
+ingest throughput with metrics enabled vs disabled
+(``repro.obs.set_metrics_enabled``); the regression gate holds the
+overhead fraction <= ``obs_overhead_frac_max`` (5%).
+
 Emits ``BENCH_stream.json`` at the repo root so runs are comparable
 across PRs, and CSV lines via ``benchmarks/run.py --only stream``.
 
@@ -107,7 +112,7 @@ def run_sharded(x, oneshot_cost: float, *, sites: int, k: int, t: int,
 
     rng = np.random.default_rng(seed + 3)
     svc.score(x[:cfg.micro_batch])
-    svc._latencies.clear()
+    svc.reset_latency_stats()
     n_waves, wave = 16, cfg.micro_batch
     for _ in range(n_waves):
         svc.submit(x[rng.integers(0, n, size=wave)])
@@ -171,6 +176,40 @@ def kernel_bench(*, n: int = 32768, m: int = 64, d: int = 8,
     return out
 
 
+def obs_overhead(x, cfg: ServiceConfig, *, repeats: int = 3) -> dict:
+    """Instrumentation cost on the ingest hot path: best-of-``repeats``
+    ingest throughput with the metrics plane enabled vs disabled (same
+    data, same config, fresh service per run — jit caches are already
+    warm).  ``overhead_frac`` is the fractional slowdown metrics-on causes
+    (negative = noise); the regression gate holds it <= 5%.
+    """
+    from repro import obs
+
+    n, batch = x.shape[0], 4096
+
+    def best_pts_per_s(enabled: bool) -> float:
+        prev = obs.set_metrics_enabled(enabled)
+        try:
+            best = float("inf")
+            for _ in range(repeats):
+                svc = StreamService(cfg)
+                t0 = time.perf_counter()
+                for i in range(0, n, batch):
+                    svc.ingest(x[i:i + batch])
+                best = min(best, time.perf_counter() - t0)
+        finally:
+            obs.set_metrics_enabled(prev)
+        return n / best
+
+    on = best_pts_per_s(True)
+    off = best_pts_per_s(False)
+    return {
+        "ingest_pts_per_s_metrics_on": round(on, 1),
+        "ingest_pts_per_s_metrics_off": round(off, 1),
+        "overhead_frac": round(1.0 - on / off, 4),
+    }
+
+
 def run(scale: float = 1.0, seed: int = 0,
         policy: KernelPolicy = KernelPolicy(),
         sites: int = 0,
@@ -206,7 +245,7 @@ def run(scale: float = 1.0, seed: int = 0,
     # --- query path: waves of micro-batches through submit/drain ---
     rng = np.random.default_rng(seed + 1)
     svc.score(x[:cfg.micro_batch])       # compile for this model, then reset
-    svc._latencies.clear()
+    svc.reset_latency_stats()
     n_waves, wave = 16, cfg.micro_batch
     t0 = time.perf_counter()
     for _ in range(n_waves):
@@ -242,6 +281,7 @@ def run(scale: float = 1.0, seed: int = 0,
         "model_version": int(svc.model.version),
     }
     result["kernels"] = kernel_bench()
+    result["obs"] = obs_overhead(x, cfg)
     if sites > 0:
         result["sharded"] = run_sharded(
             x, oneshot_cost, sites=sites, k=k, t=t, seed=seed,
@@ -284,6 +324,10 @@ def main() -> None:
               "  ".join(f"{b}: {e['pts_per_s']:,.0f} pts/s "
                         f"(block_n={e['block_n']})"
                         for b, e in live.items()))
+    ob = res["obs"]
+    print(f"obs    : metrics-on {ob['ingest_pts_per_s_metrics_on']:,.0f} "
+          f"pts/s vs off {ob['ingest_pts_per_s_metrics_off']:,.0f} pts/s "
+          f"(overhead {100 * ob['overhead_frac']:.1f}%)")
     if "sharded" in res:
         sh = res["sharded"]
         print(f"sharded[{sh['sites']} sites, {sh['path']}]: "

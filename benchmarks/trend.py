@@ -16,7 +16,8 @@ Each line:
 
     {"ts": "...", "commit": "...", "label": "...",
      "stream": {ingest_pts_per_s, query_p50_ms, query_p99_ms, cost_ratio,
-                sharded_cost_ratio?, sharded_comm_bytes?},
+                obs_overhead_frac?, sharded_cost_ratio?,
+                sharded_comm_bytes?},
      "kernels": {"<op>.<backend>": pts_per_s, ...},
      "summarize": {"<dataset>.<name>": {"recall": .., "l2_ratio": ..}, ...}}
 """
@@ -59,6 +60,9 @@ def stream_point(bench: dict) -> dict:
         "query_p99_ms": round(float(bench["query_p99_ms"]), 3),
         "cost_ratio": round(float(bench["cost_ratio"]), 4),
     }
+    ob = bench.get("obs")
+    if ob:
+        pt["obs_overhead_frac"] = round(float(ob["overhead_frac"]), 4)
     sh = bench.get("sharded")
     if sh:
         pt["sharded_cost_ratio"] = round(float(sh["cost_ratio"]), 4)

@@ -1,0 +1,107 @@
+"""Live telemetry over a drifting stream — the observability front door.
+
+A stream whose cluster centers drift over time is ingested through the
+Session facade while the telemetry plane watches: after every batch the
+process-wide metrics snapshot (``Session.stats()``) is rendered as a tiny
+text dashboard — ingest/refresh/score phase latencies, tree shape, model
+staleness, kernel-backend dispatch counts.  The same snapshot dict feeds
+``repro.render_prometheus`` for a real scrape endpoint; the last section
+prints the exposition-format text so you can see what Prometheus would.
+
+    PYTHONPATH=src python examples/metrics_dashboard.py
+    PYTHONPATH=src python examples/metrics_dashboard.py --batches 30 --prom
+"""
+import argparse
+
+import numpy as np
+
+from repro import Session, pipeline_config, render_prometheus
+
+
+def drifting_batches(rng, *, n_centers, per_batch, d, batches, drift=0.15):
+    """Gaussian mixture whose centers random-walk between batches."""
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32) * 3.0
+    for _ in range(batches):
+        centers = centers + drift * rng.normal(size=centers.shape).astype(
+            np.float32)
+        which = rng.integers(0, n_centers, size=per_batch)
+        yield (centers[which]
+               + 0.1 * rng.normal(size=(per_batch, d)).astype(np.float32))
+
+
+def _h(snap, key):
+    """One-line summary of a histogram series, or '-' if absent."""
+    e = snap["histograms"].get(key)
+    if not e or not e["count"]:
+        return "-"
+    return (f"n={e['count']:<6d} p50={e['p50'] * 1e3:7.2f}ms "
+            f"p99={e['p99'] * 1e3:7.2f}ms")
+
+
+def dashboard(snap):
+    c, g = snap["counters"], snap["gauges"]
+    tree_records = next((v for k, v in g.items()
+                         if k.startswith("tree.records")), None)
+    tree_summaries = next((v for k, v in g.items()
+                           if k.startswith("tree.summaries")), None)
+    staleness = next((v for k, v in g.items()
+                      if k.startswith("model.seconds_since_install")), None)
+    lines = [
+        f"  ingest     {_h(snap, 'phase.ingest{topology=stream}')}",
+        f"  refresh    {_h(snap, 'phase.refresh.fit{topology=stream}')}",
+        f"  score      {_h(snap, 'serve.latency{topology=stream}')}",
+        f"  tree       records={tree_records} summaries={tree_summaries}",
+        f"  refreshes  {c.get('refresh.count{topology=stream}', 0)}"
+        f"  (model age "
+        f"{'-' if staleness is None else f'{staleness:.2f}s'})",
+        "  kernels    " + "  ".join(
+            f"{k.split('{', 1)[1][:-1]}:{v}" for k, v in sorted(c.items())
+            if k.startswith("kernels.dispatch{")),
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=12)
+    ap.add_argument("--per-batch", type=int, default=2048)
+    ap.add_argument("--n-centers", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--every", type=int, default=4,
+                    help="print the dashboard every N batches")
+    ap.add_argument("--prom", action="store_true",
+                    help="also print the Prometheus exposition text")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    cfg = pipeline_config(
+        dim=args.dim, k=args.n_centers, t=50, topology="stream",
+        leaf_size=1024, refresh_every=4 * args.per_batch, micro_batch=256,
+        seed=args.seed)
+    sess = Session(cfg)
+
+    for i, batch in enumerate(drifting_batches(
+            rng, n_centers=args.n_centers, per_batch=args.per_batch,
+            d=args.dim, batches=args.batches), start=1):
+        sess.ingest(batch)
+        if sess.last_fit is not None:    # a model is installed — probe it
+            sess.score(batch[:128])
+        if i % args.every == 0 or i == args.batches:
+            print(f"--- batch {i}/{args.batches} "
+                  f"({i * args.per_batch} points ingested) ---")
+            print(dashboard(sess.stats()))
+
+    snap = sess.stats()
+    n = sum(len(snap[s]) for s in ("counters", "gauges", "histograms"))
+    print(f"\nfinal snapshot: {n} series "
+          f"(counters={len(snap['counters'])}, "
+          f"gauges={len(snap['gauges'])}, "
+          f"histograms={len(snap['histograms'])})")
+    if args.prom:
+        print("\n--- prometheus exposition (first 30 lines) ---")
+        print("\n".join(render_prometheus(snap).splitlines()[:30]))
+
+
+if __name__ == "__main__":
+    main()

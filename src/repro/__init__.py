@@ -15,6 +15,11 @@ the contract (CI asserts every name resolves).  Four groups:
   tree, k-means--, and the coordinator entry points.
 * **serving + persistence** — the stream services, their configs, the
   model/result records and the checkpoint manager.
+* **observability** — the process metrics registry (``repro.obs``):
+  ``Session.stats()`` snapshots it, ``trace``/``counter``/``gauge``/
+  ``histogram`` feed it, ``render_prometheus`` formats it for scraping,
+  ``set_metrics_enabled`` (or env ``REPRO_METRICS=0``) switches the whole
+  plane off.
 
 Deeper internals stay importable from their modules (``repro.kernels``,
 ``repro.summarize``, ``repro.stream``, ``repro.core``) but only the names
@@ -41,6 +46,9 @@ from repro.stream import (
     TreeConfig, WeightedSummary, weighted_summary_outliers,
 )
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs import (
+    MetricsRegistry, render_prometheus, set_metrics_enabled, using_registry,
+)
 
 __all__ = [
     # config + session
@@ -60,4 +68,7 @@ __all__ = [
     "BaseServiceConfig", "ServiceConfig", "ShardedServiceConfig",
     "StreamService", "ShardedStreamService", "ModelState", "QueryResult",
     "CheckpointManager",
+    # observability
+    "MetricsRegistry", "render_prometheus", "set_metrics_enabled",
+    "using_registry",
 ]

@@ -22,7 +22,13 @@ Subcommands:
                     session (cadence refreshes), score sample queries,
                     report latency, optionally ``--checkpoint``;
 * ``bench-score`` — fit, then measure the query path (p50/p99 latency and
-                    throughput over ``--repeat`` rounds of ``--queries``).
+                    throughput over ``--repeat`` rounds of ``--queries``);
+* ``stats``       — fit + score like ``run``, then emit the full metrics
+                    snapshot (``repro.obs``) as JSON or Prometheus text.
+
+``serve --metrics-interval N`` additionally emits the live snapshot as one
+JSON line every ~N seconds while streaming (``--metrics-out`` to redirect
+the lines to a file; default stdout).
 
 Every benchmark and example is expressible as such an artifact — the
 configuration travels with the result instead of living in flag soup.
@@ -165,6 +171,34 @@ def cmd_run(args) -> None:
     print("ok")
 
 
+class _MetricsEmitter:
+    """Periodic JSON-lines snapshots: one ``json.dumps(session.stats())``
+    line per ~interval seconds, checked at batch boundaries (the serve
+    loop is synchronous).  ``interval=None`` disables; path "-" = stdout."""
+
+    def __init__(self, interval, path):
+        self.interval = interval
+        self._fh = None
+        self._last = time.perf_counter()
+        if interval is not None and path not in (None, "-"):
+            self._fh = open(path, "a")
+
+    def emit(self, session, *, force: bool = False) -> None:
+        if self.interval is None:
+            return
+        now = time.perf_counter()
+        if not force and now - self._last < self.interval:
+            return
+        self._last = now
+        line = json.dumps({"ts": time.time(), **session.stats()},
+                          sort_keys=True)
+        print(line, file=self._fh or sys.stdout, flush=True)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+
+
 def cmd_serve(args) -> None:
     pipeline, data_spec = load_config_file(args.config)
     if pipeline.topology.kind == "oneshot":
@@ -172,6 +206,7 @@ def cmd_serve(args) -> None:
                          "use `run` for oneshot configs")
     x, out_ids = make_data(pipeline, data_spec)
     session = Session(pipeline)
+    emitter = _MetricsEmitter(args.metrics_interval, args.metrics_out)
     n = x.shape[0]
     print(f"serving {pipeline.topology.kind} topology: streaming {n} points "
           f"in batches of {args.batch} "
@@ -179,6 +214,7 @@ def cmd_serve(args) -> None:
     t0 = time.perf_counter()
     for i in range(0, n, args.batch):
         session.ingest(x[i:i + args.batch])
+        emitter.emit(session)
     if session.model is None or not session.model.version:
         session.refresh()
     ingest_s = time.perf_counter() - t0
@@ -189,10 +225,18 @@ def cmd_serve(args) -> None:
     stats = session.latency_stats()
     print(f"  query latency: p50 {stats['p50_ms']:.2f} ms, "
           f"p99 {stats['p99_ms']:.2f} ms over {stats['count']} requests")
+    if session.last_fit is not None:
+        print(f"  last refresh: v{session.last_fit.version} fit in "
+              f"{session.last_fit.fit_s * 1e3:.1f} ms on "
+              f"{session.last_fit.records_folded} records; model age "
+              f"{session.engine.seconds_since_install():.2f}s")
     if args.checkpoint:
         step = session.save(args.checkpoint)
         print(f"checkpointed to {args.checkpoint} @ step {step}; "
               f"Session.load() restores topology + policies from it alone")
+    # final snapshot after everything (incl. checkpoint metrics) happened
+    emitter.emit(session, force=True)
+    emitter.close()
     print("ok")
 
 
@@ -223,6 +267,29 @@ def cmd_bench_score(args) -> None:
     print("ok")
 
 
+def cmd_stats(args) -> None:
+    """Exercise the pipeline end to end, then emit the telemetry snapshot
+    — the quickest way to see every metric the layers report."""
+    from repro import obs
+
+    pipeline, data_spec = load_config_file(args.config)
+    x, out_ids = make_data(pipeline, data_spec)
+    session = Session(pipeline)
+    session.fit(x)
+    q, _ = _sample_queries(x, out_ids, args.queries, pipeline.seed)
+    session.score(q)
+    snap = session.stats()
+    if args.format == "prom":
+        out = obs.render_prometheus(snap)
+    else:
+        out = json.dumps(snap, indent=2, sort_keys=True) + "\n"
+    if args.out in (None, "-"):
+        sys.stdout.write(out)
+    else:
+        Path(args.out).write_text(out)
+        print(f"wrote {args.format} snapshot to {args.out}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -246,6 +313,13 @@ def main(argv=None) -> None:
     p_srv.add_argument("--queries", type=int, default=64)
     p_srv.add_argument("--checkpoint", default=None,
                        help="directory to checkpoint the serving session")
+    p_srv.add_argument("--metrics-interval", type=float, default=None,
+                       metavar="SECONDS",
+                       help="emit the live metrics snapshot as one JSON "
+                            "line every ~N seconds while streaming")
+    p_srv.add_argument("--metrics-out", default="-",
+                       help="destination for --metrics-interval lines "
+                            "(file path, or '-' for stdout)")
     p_srv.set_defaults(fn=cmd_serve)
 
     p_bs = sub.add_parser("bench-score", help="measure the query path")
@@ -254,6 +328,19 @@ def main(argv=None) -> None:
                       help="queries per round")
     p_bs.add_argument("--repeat", type=int, default=20, help="rounds")
     p_bs.set_defaults(fn=cmd_bench_score)
+
+    p_st = sub.add_parser("stats",
+                          help="fit + score a config, then emit the full "
+                               "repro.obs metrics snapshot")
+    p_st.add_argument("--config", required=True)
+    p_st.add_argument("--queries", type=int, default=64,
+                      help="sample queries to score before the snapshot")
+    p_st.add_argument("--format", choices=("json", "prom"), default="json",
+                      help="snapshot encoding (plain JSON or Prometheus "
+                           "exposition text)")
+    p_st.add_argument("--out", default="-",
+                      help="file path, or '-' for stdout")
+    p_st.set_defaults(fn=cmd_stats)
 
     args = ap.parse_args(argv)
     args.fn(args)

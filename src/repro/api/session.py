@@ -56,6 +56,8 @@ class OneshotEngine(ServingFrontEnd):
     available as ``.result``.
     """
 
+    _topology = "oneshot"
+
     def __init__(self, pipeline: PipelineConfig):
         topo = pipeline.topology
         if topo.kind != "oneshot":
@@ -85,6 +87,10 @@ class OneshotEngine(ServingFrontEnd):
     @property
     def total_ingested(self) -> int:
         return int(sum(r.shape[0] for r in self._rows))
+
+    def _root_records(self) -> int:
+        # the oneshot "root" is every raw row the coordinator will see
+        return self.total_ingested
 
     # ------------------------------------------------------------ refresh fit
     def _fit_closure(self, version: int):
@@ -279,6 +285,27 @@ class Session:
 
     def latency_stats(self) -> dict:
         return self.engine.latency_stats()
+
+    def stats(self) -> dict:
+        """The process metrics snapshot (``repro.obs``): one plain dict of
+        every counter, gauge and latency/phase histogram the layers under
+        this session reported — serve latency, ingest/refresh/score phase
+        timings, tree activity, comm records+bytes per site, kernel-backend
+        dispatch counts, checkpoint durations.  JSON-serializable as-is;
+        render for Prometheus with ``repro.obs.render_prometheus``.
+
+        The snapshot is process-wide by design (one registry, like any
+        exporter) — two sessions of the same topology share series.
+        """
+        from repro import obs
+        return obs.snapshot()
+
+    @property
+    def last_fit(self):
+        """:class:`repro.stream.service.FitStats` of the most recent
+        installed refresh (duration, records folded) — None before the
+        first fit.  Staleness is ``engine.seconds_since_install()``."""
+        return self.engine.last_fit
 
     @property
     def model(self) -> Optional[ModelState]:

@@ -35,6 +35,8 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -72,27 +74,34 @@ class CheckpointManager:
         self.wait()
 
         def _write():
-            tmp = self.root / f"step_{step:09d}.tmp"
-            final = self.root / f"step_{step:09d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir(parents=True)
-            manifest = {"step": step, "treedef": str(treedef),
-                        "meta": meta or {}, "leaves": []}
-            for i, arr in enumerate(host_leaves):
-                name = f"arr_{i:05d}.npy"
-                np.save(tmp / name, arr)
-                manifest["leaves"].append({
-                    "file": name,
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
-                })
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
-            if final.exists():
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
-            self._prune()
+            # runs on the writer thread for async saves — the registry is
+            # mutation-thread-safe, so recording from here is fine
+            with obs.trace("checkpoint.save"):
+                tmp = self.root / f"step_{step:09d}.tmp"
+                final = self.root / f"step_{step:09d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                manifest = {"step": step, "treedef": str(treedef),
+                            "meta": meta or {}, "leaves": []}
+                for i, arr in enumerate(host_leaves):
+                    name = f"arr_{i:05d}.npy"
+                    np.save(tmp / name, arr)
+                    manifest["leaves"].append({
+                        "file": name,
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "crc32": zlib.crc32(
+                            np.ascontiguousarray(arr).tobytes()),
+                    })
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                if final.exists():
+                    shutil.rmtree(final)
+                os.rename(tmp, final)  # atomic publish
+                self._prune()
+            obs.counter("checkpoint.saves").inc()
+            obs.counter("checkpoint.bytes_written").inc(
+                sum(arr.nbytes for arr in host_leaves))
 
         if blocking:
             _write()
@@ -144,21 +153,31 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         d = self.root / f"step_{step:09d}"
-        manifest = json.loads((d / "manifest.json").read_text())
-        leaves_like, treedef = _flatten(tree_like)
-        if len(manifest["leaves"]) != len(leaves_like):
-            raise ValueError(
-                f"checkpoint has {len(manifest['leaves'])} leaves, "
-                f"expected {len(leaves_like)}")
-        shard_leaves = (_flatten(shardings)[0] if shardings is not None
-                        else [None] * len(leaves_like))
-        out = []
-        for meta, like, sh in zip(manifest["leaves"], leaves_like, shard_leaves):
-            arr = np.load(d / meta["file"])
-            if verify and zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
-                raise IOError(f"crc mismatch in {meta['file']} (step {step})")
-            if tuple(arr.shape) != tuple(like.shape):
-                raise ValueError(f"shape mismatch {arr.shape} vs {like.shape}")
-            arr = arr.astype(like.dtype)
-            out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        with obs.trace("checkpoint.restore"):
+            manifest = json.loads((d / "manifest.json").read_text())
+            leaves_like, treedef = _flatten(tree_like)
+            if len(manifest["leaves"]) != len(leaves_like):
+                raise ValueError(
+                    f"checkpoint has {len(manifest['leaves'])} leaves, "
+                    f"expected {len(leaves_like)}")
+            shard_leaves = (_flatten(shardings)[0] if shardings is not None
+                            else [None] * len(leaves_like))
+            out = []
+            read = 0
+            for meta, like, sh in zip(manifest["leaves"], leaves_like,
+                                      shard_leaves):
+                arr = np.load(d / meta["file"])
+                read += arr.nbytes
+                if verify and zlib.crc32(
+                        np.ascontiguousarray(arr).tobytes()) != meta["crc32"]:
+                    raise IOError(
+                        f"crc mismatch in {meta['file']} (step {step})")
+                if tuple(arr.shape) != tuple(like.shape):
+                    raise ValueError(
+                        f"shape mismatch {arr.shape} vs {like.shape}")
+                arr = arr.astype(like.dtype)
+                out.append(jax.device_put(arr, sh) if sh is not None
+                           else jax.numpy.asarray(arr))
+        obs.counter("checkpoint.restores").inc()
+        obs.counter("checkpoint.bytes_read").inc(read)
         return jax.tree_util.tree_unflatten(treedef, out), step

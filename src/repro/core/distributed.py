@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core.augmented import augmented_summary_outliers
 from repro.core.collective import gather_sites, replicated_coordinator
 from repro.core.kmeans_mm import kmeans_minus_minus
@@ -132,6 +133,16 @@ def distributed_cluster(
 
     fn = replicated_coordinator(per_site, mesh, axis=axis, n_sharded=1)
     centers, out_ids, gids, wts, comm, cost = fn(x_parts, key)
+    # comm accounting happens post-hoc on the host (the gather itself runs
+    # inside the shard_map program): valid records per site from the id
+    # blocks, padded bytes from the per-site slice of the gathered payload
+    reg_obs = obs.get_default_registry()
+    if reg_obs.enabled:
+        gids_h = np.asarray(gids).reshape(s, -1)
+        cap = gids_h.shape[1]
+        per_rec = [int((gids_h[i] >= 0).sum()) for i in range(s)]
+        site_bytes = cap * (4 * d + 4 + 1 + 4)   # pts + w + valid + gid
+        obs.record_comm(per_rec, [site_bytes] * s, path="shard_map")
     return DistClusterResult(
         centers=centers,
         outlier_ids=out_ids,
@@ -174,39 +185,50 @@ def simulate_coordinator(
     all_pts, all_w, all_gid, all_cand = [], [], [], []
     for i, part in enumerate(parts):
         skey = jax.random.fold_in(key, i)
-        if summarizer is not None:
-            from repro.summarize.base import summarize as _summarize_w
+        with obs.trace("oneshot.site_summary", site=i):
+            if summarizer is not None:
+                from repro.summarize.base import summarize as _summarize_w
 
-            ws = _summarize_w(part, np.ones((part.shape[0],), np.float32),
-                              skey, k=k, t=t_i, metric=metric,
-                              policy=summarizer, kernel_policy=policy)
-            all_pts.append(np.asarray(ws.points))
-            all_w.append(np.asarray(ws.weights))
-            all_gid.append(np.asarray(ws.indices) + offs[i])
-            all_cand.append(np.asarray(ws.is_candidate))
-            continue
-        if summary_alg == "augmented":
-            summ = augmented_summary_outliers(jnp.asarray(part), skey, k=k, t=t_i,
-                                              metric=metric, policy=policy)
-        elif compact:
-            summ = summary_outliers_compact(part, skey, k=k, t=t_i, metric=metric,
-                                            policy=policy)
-        else:
-            summ = summary_outliers(jnp.asarray(part), skey, k=k, t=t_i,
-                                    metric=metric, policy=policy)
-        valid = np.asarray(summ.valid)
-        all_pts.append(np.asarray(summ.points)[valid])
-        all_w.append(np.asarray(summ.weights)[valid])
-        all_gid.append(np.asarray(summ.indices)[valid] + offs[i])
-        all_cand.append(np.asarray(summ.is_candidate)[valid])
+                ws = _summarize_w(part, np.ones((part.shape[0],), np.float32),
+                                  skey, k=k, t=t_i, metric=metric,
+                                  policy=summarizer, kernel_policy=policy)
+                all_pts.append(np.asarray(ws.points))
+                all_w.append(np.asarray(ws.weights))
+                all_gid.append(np.asarray(ws.indices) + offs[i])
+                all_cand.append(np.asarray(ws.is_candidate))
+                continue
+            if summary_alg == "augmented":
+                summ = augmented_summary_outliers(jnp.asarray(part), skey,
+                                                  k=k, t=t_i, metric=metric,
+                                                  policy=policy)
+            elif compact:
+                summ = summary_outliers_compact(part, skey, k=k, t=t_i,
+                                                metric=metric, policy=policy)
+            else:
+                summ = summary_outliers(jnp.asarray(part), skey, k=k, t=t_i,
+                                        metric=metric, policy=policy)
+            valid = np.asarray(summ.valid)
+            all_pts.append(np.asarray(summ.points)[valid])
+            all_w.append(np.asarray(summ.weights)[valid])
+            all_gid.append(np.asarray(summ.indices)[valid] + offs[i])
+            all_cand.append(np.asarray(summ.is_candidate)[valid])
 
+    # each site "sends" exactly its live summary records to the coordinator
+    obs.record_comm(
+        [p.shape[0] for p in all_pts],
+        [p.nbytes + w.nbytes + g.nbytes + c.nbytes
+         for p, w, g, c in zip(all_pts, all_w, all_gid, all_cand)],
+        path="host-sim")
     pts = jnp.asarray(np.concatenate(all_pts), jnp.float32)
     wts = jnp.asarray(np.concatenate(all_w), jnp.float32)
     gid = np.concatenate(all_gid)
     n_rec = pts.shape[0]
-    sol = kmeans_minus_minus(pts, wts, jnp.ones((n_rec,), bool),
-                             jax.random.fold_in(key, 2**31 - 1), k=k, t=float(t),
-                             iters=second_iters, metric=metric, policy=policy)
+    with obs.trace("oneshot.second_level"):
+        sol = kmeans_minus_minus(pts, wts, jnp.ones((n_rec,), bool),
+                                 jax.random.fold_in(key, 2**31 - 1),
+                                 k=k, t=float(t),
+                                 iters=second_iters, metric=metric,
+                                 policy=policy)
     out_mask = np.asarray(sol.outlier)
     return {
         "centers": np.asarray(sol.centers),

@@ -46,6 +46,8 @@ from typing import Callable, NamedTuple, Optional, Sequence
 import jax
 import numpy as np
 
+from repro import obs
+
 BACKENDS = ("auto", "pallas", "blocked", "ref")
 
 OPS = ("min_argmin", "lloyd_step")
@@ -243,6 +245,9 @@ def resolve(
     platform = platform or jax.default_backend()
     reg = select_backend(op, policy, metric=metric, n=n, m=m, d=d,
                          dtype=dtype, platform=platform)
+    # resolution happens at trace time, so under jit this counts compiled
+    # registry decisions (one per shape/policy), not per-element calls
+    obs.counter("kernels.dispatch", op=op, backend=reg.name).inc()
     bn = policy.block_n
     if bn is None:
         if policy.autotune and reg.tune_candidates:
@@ -376,7 +381,9 @@ def autotune_block_n(
     cache = _load_cache()
     hit = cache.get(key)
     if isinstance(hit, dict) and "block_n" in hit:
+        obs.counter("kernels.autotune_cache", result="hit").inc()
         return int(hit["block_n"])
+    obs.counter("kernels.autotune_cache", result="miss").inc()
     _tuning = True
     try:
         cands = sorted({min(c, bn_rows) for c in reg.tune_candidates})

@@ -1,0 +1,45 @@
+"""One telemetry plane for the whole pipeline.
+
+``repro.obs`` is where every layer — serving front end, stream tree,
+sharded refresh, kernel dispatch, checkpointing — reports what it did:
+counters, gauges, latency histograms with exact percentiles, and
+``trace(phase)`` wall-time spans, all snapshot-able to one plain dict
+(``Session.stats()`` at the front door) and renderable as Prometheus
+text (:func:`render_prometheus`).
+
+Disable process-wide with ``REPRO_METRICS=0`` or
+:func:`set_metrics_enabled`; instrumentation is timers and tallies only,
+so results are bit-identical either way.
+"""
+from repro.obs.registry import (DEFAULT_BUCKETS, DEFAULT_RING,
+                                SNAPSHOT_VERSION, Counter, Gauge, Histogram,
+                                MetricsRegistry, counter, gauge,
+                                get_default_registry, histogram, metric_key,
+                                metrics_enabled, record_comm,
+                                set_default_registry, set_metrics_enabled,
+                                snapshot, split_key, trace, using_registry)
+from repro.obs.prom import render_prometheus
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "DEFAULT_RING",
+    "SNAPSHOT_VERSION",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "counter",
+    "gauge",
+    "get_default_registry",
+    "histogram",
+    "metric_key",
+    "metrics_enabled",
+    "record_comm",
+    "render_prometheus",
+    "set_default_registry",
+    "set_metrics_enabled",
+    "snapshot",
+    "split_key",
+    "trace",
+    "using_registry",
+]

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
@@ -108,6 +109,17 @@ class ModelState(NamedTuple):
     trained_weight: jnp.ndarray  # () f32 — mass the model was fit on
 
 
+class FitStats(NamedTuple):
+    """Telemetry for the most recent installed refresh (every topology —
+    the sharded service's ``RefreshStats`` adds the comm accounting on
+    top of this).  ``installed_at`` is a ``time.perf_counter`` stamp;
+    compare against it, don't interpret it as wall-clock."""
+    version: int
+    records_folded: int      # live root records the model was fit on
+    fit_s: float             # wall time of the second-level fit
+    installed_at: float
+
+
 class QueryResult(NamedTuple):
     request_id: int
     center: int              # nearest-center index
@@ -153,19 +165,35 @@ class ServingFrontEnd:
     thread, that computes the next ``ModelState``.  The front end decides
     *when* it runs (inline for blocking refreshes, on a worker thread for
     async ones) and installs the result.
+
+    Telemetry: per-request latency goes to the bounded
+    ``serve.latency{topology=...}`` histogram in the process metrics
+    registry (fixed buckets + recent-sample ring — a long-running service
+    holds O(1) latency state, unlike the unbounded list this replaced);
+    refresh phases are traced (``phase.refresh.gather|fit|install``); the
+    last installed refresh is summarized in ``last_fit`` (:class:`FitStats`)
+    with a live ``model.seconds_since_install`` staleness gauge.  Metrics
+    are keyed per *topology*, so two services of the same class in one
+    process share series — the registry is process-level, like any
+    Prometheus exporter.
     """
+
+    _topology = "serve"   # subclasses: "stream" | "sharded" | "oneshot"
 
     def __init__(self, cfg):
         self.cfg = cfg
         self.model: Optional[ModelState] = None
         self._queue: deque = deque()   # (id, row (d,), t_enqueue)
         self._next_id = 0
-        self._latencies: list[float] = []
+        self._lat = obs.histogram("serve.latency", topology=self._topology)
         self._worker: Optional[threading.Thread] = None
         self._worker_box: list = []
         self._backlog = False
         self._next_version = 0
         self._since_refresh = 0
+        self.last_fit: Optional[FitStats] = None
+        obs.gauge("model.seconds_since_install",
+                  topology=self._topology).set_fn(self.seconds_since_install)
 
     # ------------------------------------------------------------ write path
     def _validate_points(self, points, weights):
@@ -191,7 +219,9 @@ class ServingFrontEnd:
             if take <= 0:   # e.g. restored with a smaller refresh_every
                 self._cadence_refresh()
                 continue
-            sink(x[i:i + take], None if w is None else w[i:i + take])
+            with obs.trace("ingest", topology=self._topology):
+                sink(x[i:i + take], None if w is None else w[i:i + take])
+            obs.counter("ingest.points", topology=self._topology).inc(take)
             self._since_refresh += take
             i += take
             if self._since_refresh >= self.cfg.refresh_every:
@@ -203,6 +233,30 @@ class ServingFrontEnd:
     # ------------------------------------------------------------ refresh
     def _fit_closure(self, version: int) -> Callable[[], ModelState]:
         raise NotImplementedError
+
+    def _root_records(self) -> int:
+        """Live root records a refresh fits on (telemetry only)."""
+        return 0
+
+    def _timed_fit(self, fit: Callable[[], ModelState]):
+        """Run the fit, fully materialized, under the fit-phase span.
+        Returns (model, fit wall seconds)."""
+        t0 = time.perf_counter()
+        with obs.trace("refresh.fit", topology=self._topology):
+            model = fit()
+            jax.block_until_ready(model)
+        return model, time.perf_counter() - t0
+
+    def _install(self, model: ModelState, fit_s: float,
+                 records: int) -> None:
+        with obs.trace("refresh.install", topology=self._topology):
+            self.model = model
+            self.last_fit = FitStats(
+                version=int(model.version), records_folded=int(records),
+                fit_s=float(fit_s), installed_at=time.perf_counter())
+        obs.counter("refresh.count", topology=self._topology).inc()
+        obs.counter("refresh.records_folded",
+                    topology=self._topology).inc(int(records))
 
     def refresh(self, *, blocking: bool = True) -> Optional[ModelState]:
         """Fit a new model on the current root.
@@ -218,8 +272,11 @@ class ServingFrontEnd:
         if blocking:
             self.join_refresh()
             self._next_version += 1
-            model = self._fit_closure(self._next_version)()
-            self.model = model
+            with obs.trace("refresh.gather", topology=self._topology):
+                fit = self._fit_closure(self._next_version)
+                records = self._root_records()
+            model, fit_s = self._timed_fit(fit)
+            self._install(model, fit_s, records)
             self._since_refresh = 0
             return model
         if self._worker is not None:
@@ -231,14 +288,17 @@ class ServingFrontEnd:
 
     def _spawn_fit(self) -> None:
         self._next_version += 1
-        fit = self._fit_closure(self._next_version)
+        with obs.trace("refresh.gather", topology=self._topology):
+            fit = self._fit_closure(self._next_version)
+            records = self._root_records()
         box: list = []
 
         def run():
             try:
-                box.append(("ok", fit()))
+                model, fit_s = self._timed_fit(fit)
+                box.append(("ok", model, fit_s, records))
             except BaseException as e:  # surfaced on the caller at poll/join
-                box.append(("err", e))
+                box.append(("err", e, 0.0, 0))
 
         self._worker_box = box
         self._worker = threading.Thread(
@@ -253,12 +313,12 @@ class ServingFrontEnd:
         if w is None or w.is_alive():
             return False
         w.join()
-        status, payload = self._worker_box[0]
+        status, payload, fit_s, records = self._worker_box[0]
         self._worker, self._worker_box = None, []
         if status == "err":
             self._backlog = False   # don't respawn on top of a failed fit
             raise payload
-        self.model = payload
+        self._install(payload, fit_s, records)
         if self._backlog:
             self._backlog = False
             self._spawn_fit()
@@ -283,10 +343,12 @@ class ServingFrontEnd:
         x, _ = self._validate_points(points, None)
         now = time.perf_counter()
         ids = []
-        for row in x:
-            ids.append(self._next_id)
-            self._queue.append((self._next_id, row, now))
-            self._next_id += 1
+        with obs.trace("score.enqueue", topology=self._topology):
+            for row in x:
+                ids.append(self._next_id)
+                self._queue.append((self._next_id, row, now))
+                self._next_id += 1
+        obs.counter("score.requests", topology=self._topology).inc(len(ids))
         return ids
 
     def drain(self, max_requests: Optional[int] = None) -> list[QueryResult]:
@@ -299,25 +361,31 @@ class ServingFrontEnd:
         cfg = self.cfg
         out: list[QueryResult] = []
         budget = len(self._queue) if max_requests is None else max_requests
-        while self._queue and budget > 0:
-            take = min(cfg.micro_batch, len(self._queue), budget)
-            batch = [self._queue.popleft() for _ in range(take)]
-            budget -= take
-            xb = np.zeros((cfg.micro_batch, cfg.dim), np.float32)
-            xb[:take] = np.stack([b[1] for b in batch])
-            dist, amin, score = _score_batch(
-                jnp.asarray(xb), self.model.centers, self.model.threshold,
-                metric=cfg.metric, policy=cfg.policy)
-            jax.block_until_ready(dist)
-            done = time.perf_counter()
-            dist, amin, score = (np.asarray(a) for a in (dist, amin, score))
-            for i, (rid, _, t0) in enumerate(batch):
-                lat = done - t0
-                self._latencies.append(lat)
-                out.append(QueryResult(
-                    request_id=rid, center=int(amin[i]),
-                    distance=float(dist[i]), outlier_score=float(score[i]),
-                    is_outlier=bool(score[i] > 1.0), latency_s=lat))
+        with obs.trace("score.drain", topology=self._topology):
+            while self._queue and budget > 0:
+                with obs.trace("score.batch", topology=self._topology):
+                    take = min(cfg.micro_batch, len(self._queue), budget)
+                    batch = [self._queue.popleft() for _ in range(take)]
+                    budget -= take
+                    xb = np.zeros((cfg.micro_batch, cfg.dim), np.float32)
+                    xb[:take] = np.stack([b[1] for b in batch])
+                with obs.trace("score.pdist", topology=self._topology):
+                    dist, amin, score = _score_batch(
+                        jnp.asarray(xb), self.model.centers,
+                        self.model.threshold,
+                        metric=cfg.metric, policy=cfg.policy)
+                    jax.block_until_ready(dist)
+                done = time.perf_counter()
+                dist, amin, score = (np.asarray(a)
+                                     for a in (dist, amin, score))
+                for i, (rid, _, t0) in enumerate(batch):
+                    lat = done - t0
+                    self._lat.observe(lat)
+                    out.append(QueryResult(
+                        request_id=rid, center=int(amin[i]),
+                        distance=float(dist[i]),
+                        outlier_score=float(score[i]),
+                        is_outlier=bool(score[i] > 1.0), latency_s=lat))
         return out
 
     def score(self, points) -> list[QueryResult]:
@@ -326,12 +394,26 @@ class ServingFrontEnd:
         return self.drain()
 
     def latency_stats(self) -> dict:
-        if not self._latencies:
+        """Compat shim over the ``serve.latency`` histogram: same keys the
+        pre-registry list-based implementation returned.  Percentiles are
+        exact over the histogram's recent-sample ring (the full snapshot —
+        buckets, p95, min/max — lives in ``obs.snapshot()``)."""
+        if self._lat.count == 0:
             return {"count": 0, "p50_ms": float("nan"), "p99_ms": float("nan")}
-        lat = np.asarray(self._latencies)
-        return {"count": int(lat.size),
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+        return {"count": int(self._lat.count),
+                "p50_ms": float(self._lat.percentile(50)) * 1e3,
+                "p99_ms": float(self._lat.percentile(99)) * 1e3}
+
+    def reset_latency_stats(self) -> None:
+        """Zero the ``serve.latency`` histogram (benchmark epochs)."""
+        self._lat.reset()
+
+    def seconds_since_install(self) -> Optional[float]:
+        """Age of the serving model — None before the first refresh.  Also
+        exported live as the ``model.seconds_since_install`` gauge."""
+        if self.last_fit is None:
+            return None
+        return time.perf_counter() - self.last_fit.installed_at
 
     # ------------------------------------------------------------ checkpoint
     def _model_arrays(self) -> dict:
@@ -363,11 +445,16 @@ class ServingFrontEnd:
 
 
 class StreamService(ServingFrontEnd):
+    _topology = "stream"
+
     def __init__(self, cfg: ServiceConfig, key: jax.Array | None = None):
         super().__init__(cfg)
         key = key if key is not None else jax.random.key(cfg.seed)
         kt, self._model_key = jax.random.split(key)
         self.tree = StreamTree(cfg.tree_config(), kt)
+
+    def _root_records(self) -> int:
+        return self.tree.num_records
 
     # ------------------------------------------------------------ write path
     def ingest(self, points, weights=None) -> None:

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.collective import (gather_sites, gathered_bytes,
                                    payload_bytes, replicated_coordinator,
@@ -115,6 +116,8 @@ class ShardedStreamService(ServingFrontEnd):
     multi-host one.
     """
 
+    _topology = "sharded"
+
     def __init__(self, cfg: ShardedServiceConfig,
                  key: jax.Array | None = None):
         if cfg.n_sites < 1:
@@ -125,9 +128,14 @@ class ShardedStreamService(ServingFrontEnd):
         site_cfg = cfg.site_tree_config()
         self.trees = [StreamTree(site_cfg, jax.random.fold_in(kt, i))
                       for i in range(cfg.n_sites)]
+        for i, tr in enumerate(self.trees):
+            tr.obs_labels["site"] = i
         self._routed = 0             # round-robin cursor over sites
         self._fit_program = None     # cached shard_map program (all refreshes)
         self.last_refresh: Optional[RefreshStats] = None
+
+    def _root_records(self) -> int:
+        return self.num_records
 
     # ------------------------------------------------------------ write path
     def ingest(self, points, weights=None, site: int | None = None) -> None:
@@ -191,6 +199,7 @@ class ShardedStreamService(ServingFrontEnd):
         val = np.stack([r[2] for r in roots])          # (s, rows)
         one_site = (roots[0][0], roots[0][1], roots[0][2])
         use_sm = cfg.use_shard_map and len(jax.devices()) >= cfg.n_sites
+        site_bytes = payload_bytes(one_site)
         self.last_refresh = RefreshStats(
             version=version,
             path="shard_map" if use_sm else "host-sim",
@@ -198,7 +207,9 @@ class ShardedStreamService(ServingFrontEnd):
             per_site_records=tuple(recs),
             comm_records=int(sum(recs)),
             comm_bytes=gathered_bytes(one_site, cfg.n_sites),
-            payload_bytes=payload_bytes(one_site))
+            payload_bytes=site_bytes)
+        # every site ships the same padded root shape, hence equal bytes
+        obs.record_comm(recs, [site_bytes] * cfg.n_sites, topology="sharded")
         key = jax.random.fold_in(self._model_key, version)
 
         if not use_sm:
@@ -286,6 +297,8 @@ class ShardedStreamService(ServingFrontEnd):
         svc.trees = [
             StreamTree.from_state(site_cfg, state["sites"][f"site_{i:03d}"])
             for i in range(cfg.n_sites)]
+        for i, tr in enumerate(svc.trees):
+            tr.obs_labels["site"] = i
         svc._since_refresh = int(state["counters"]["since_refresh"])
         svc._next_id = int(state["counters"]["next_id"])
         svc._routed = int(state["counters"]["routed"])

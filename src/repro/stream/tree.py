@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.stream.weighted import WeightedSummary, _bucket
 from repro.summarize.base import (SummarizerPolicy, get_default_summarizer,
@@ -99,6 +100,9 @@ class StreamTree:
         self._flushed = 0                    # raw points reduced into leaves
         self.total_ingested = 0
         self._cap = record_cap(cfg)
+        # telemetry labels; owners may add context after construction (the
+        # sharded service tags each site's tree with its site id)
+        self.obs_labels: dict = {"summarizer": cfg.summarizer.name}
 
     # ------------------------------------------------------------ ingest
     def ingest(self, points, weights=None) -> None:
@@ -130,11 +134,13 @@ class StreamTree:
 
     def _flush_leaf(self) -> None:
         cfg = self.cfg
-        summ = summarize(
-            self._buf[:self._buf_n], self._buf_w[:self._buf_n],
-            self._next_key(), k=cfg.k, t=cfg.t, alpha=cfg.alpha,
-            beta=cfg.beta, metric=cfg.metric, policy=cfg.summarizer,
-            kernel_policy=cfg.policy)
+        with obs.trace("ingest.leaf_flush", **self.obs_labels):
+            summ = summarize(
+                self._buf[:self._buf_n], self._buf_w[:self._buf_n],
+                self._next_key(), k=cfg.k, t=cfg.t, alpha=cfg.alpha,
+                beta=cfg.beta, metric=cfg.metric, policy=cfg.summarizer,
+                kernel_policy=cfg.policy)
+        obs.counter("tree.leaf_flushes", **self.obs_labels).inc()
         self._check_cap(summ)
         self.nodes.append(TreeNode(
             summary=summ, level=0, min_seq=self._flushed,
@@ -143,6 +149,16 @@ class StreamTree:
         self._buf_n = 0
         self._evict()
         self._compact()
+        self._update_gauges()
+
+    def _update_gauges(self) -> None:
+        reg = obs.get_default_registry()
+        if not reg.enabled:
+            return
+        reg.gauge("tree.records", **self.obs_labels).set(self.num_records)
+        reg.gauge("tree.summaries", **self.obs_labels).set(len(self.nodes))
+        reg.gauge("tree.max_level", **self.obs_labels).set(
+            max((nd.level for nd in self.nodes), default=0))
 
     def _check_cap(self, summ: WeightedSummary) -> None:
         if summ.points.shape[0] > self._cap:
@@ -156,15 +172,21 @@ class StreamTree:
         if self.cfg.window is None:
             return
         cutoff = self.total_ingested - self.cfg.window
-        self.nodes = [nd for nd in self.nodes if nd.max_seq > cutoff]
+        keep = [nd for nd in self.nodes if nd.max_seq > cutoff]
+        if len(keep) < len(self.nodes):
+            obs.counter("tree.evictions",
+                        **self.obs_labels).inc(len(self.nodes) - len(keep))
+        self.nodes = keep
 
     def _merge_pair(self, i: int, j: int) -> None:
         a, b = self.nodes[i], self.nodes[j]
         cfg = self.cfg
-        summ = reduce_summaries(
-            [a.summary, b.summary], self._next_key(), k=cfg.k, t=cfg.t,
-            alpha=cfg.alpha, beta=cfg.beta, metric=cfg.metric,
-            policy=cfg.summarizer, kernel_policy=cfg.policy)
+        with obs.trace("ingest.merge_reduce", **self.obs_labels):
+            summ = reduce_summaries(
+                [a.summary, b.summary], self._next_key(), k=cfg.k, t=cfg.t,
+                alpha=cfg.alpha, beta=cfg.beta, metric=cfg.metric,
+                policy=cfg.summarizer, kernel_policy=cfg.policy)
+        obs.counter("tree.merges", **self.obs_labels).inc()
         self._check_cap(summ)
         self.nodes[i] = TreeNode(
             summary=summ, level=max(a.level, b.level) + 1,
