@@ -17,7 +17,11 @@ the snapshot's internal invariants break:
 metric key starts with the prefix — the job lists the series every layer
 must contribute (serve latency, refresh phases, comm counters, kernel
 dispatch, checkpoint durations), which is the acceptance criterion "one
-snapshot covers every layer" kept true by CI.
+snapshot covers every layer" kept true by CI.  ``--require-set NAME``
+expands to every prefix of the schema file's ``x-required-series[NAME]``
+list — the serve-load-smoke job passes ``--require-set serving`` to
+demand the scheduler's queue-depth / shed / occupancy / per-tenant
+latency series without repeating the list in the workflow.
 
 The validator interprets the (small) subset of JSON Schema the schema
 file uses — type / required / properties / additionalProperties / const /
@@ -146,11 +150,25 @@ def main() -> int:
                     metavar="PREFIX",
                     help="fail unless some metric key starts with PREFIX "
                          "(repeatable)")
+    ap.add_argument("--require-set", action="append", default=[],
+                    metavar="NAME",
+                    help="require every prefix of the named "
+                         "x-required-series set from the schema file "
+                         "(e.g. 'serving'; repeatable)")
     args = ap.parse_args()
     snap = json.loads(Path(args.snapshot).read_text())
     schema = json.loads(Path(args.schema).read_text())
+    prefixes = list(args.require)
+    sets = schema.get("x-required-series", {})
+    for name in args.require_set:
+        if name not in sets:
+            print(f"FAIL --require-set {name!r}: schema has no such "
+                  f"x-required-series set (have {sorted(sets)})",
+                  file=sys.stderr)
+            return 1
+        prefixes.extend(sets[name])
     errs = (validate(snap, schema) + semantic_checks(snap)
-            + require_prefixes(snap, args.require))
+            + require_prefixes(snap, prefixes))
     for e in errs:
         print(f"FAIL {e}")
     if errs:
@@ -160,7 +178,7 @@ def main() -> int:
     n = sum(len(snap.get(s, {}))
             for s in ("counters", "gauges", "histograms"))
     print(f"obs snapshot gate passed ({n} series, "
-          f"{len(args.require)} required prefixes present)")
+          f"{len(prefixes)} required prefixes present)")
     return 0
 
 

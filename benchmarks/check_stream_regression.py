@@ -30,6 +30,17 @@ a PR cannot silently trade away streaming model quality:
                                   metrics-on vs metrics-off throughput) —
                                   instrumentation must stay ~free.
 
+The ``serving_*`` keys gate the ``"serving"`` section (the async
+scheduler's goodput-vs-offered-load ladder, ``serving_bench.py``):
+``serving_min_goodput_rps`` floors peak goodput,
+``serving_overload_p99_ms_max`` bounds completed-request p99 at the
+highest (overload) rung, ``serving_overload_shed_min`` demands that
+admission control actually sheds there, ``serving_low_load_shed_max``
+demands it sheds ~nothing below capacity, and the section's
+``bit_identical`` flag must be true.  A bench without the section skips
+these gates unless ``--require-serving`` is passed (the serve-load CI
+lane does).
+
 With any ``summarize_*`` key present the gate also reads
 ``BENCH_summarize.json`` (benchmarks/summarizer_bench.py) and checks, per
 gated dataset (gauss / kdd_like):
@@ -112,6 +123,70 @@ def check(bench: dict, thr: dict) -> list[str]:
     return failures
 
 
+def check_serving(bench: dict, thr: dict, *,
+                  require_serving: bool = False) -> list[str]:
+    """Gate the ``"serving"`` section (serving_bench.py's load ladder).
+
+    The section is optional in a plain bench run; ``--require-serving``
+    (the serve-load-smoke CI job) makes its absence a failure.  Gates:
+    goodput floor, overload p99 ceiling, overload must actually shed
+    (that is the mechanism that bounds p99), ~no shedding below capacity,
+    and the concurrent path must have scored bit-identically.
+    """
+    failures: list[str] = []
+    sv = bench.get("serving")
+    if sv is None:
+        if require_serving:
+            print("FAIL serving: section missing from bench output "
+                  "(run benchmarks/serving_bench.py)")
+            return ["serving_section"]
+        if any(key.startswith("serving_") for key in thr):
+            print("note serving: section absent, serving gates skipped")
+        return failures
+
+    def gate_max(name, value, bound):
+        tag = "ok  " if value <= bound else "FAIL"
+        print(f"{tag} {name}: {value:.4f} (max {bound})")
+        if value > bound:
+            failures.append(name)
+
+    def gate_min(name, value, bound):
+        tag = "ok  " if value >= bound else "FAIL"
+        print(f"{tag} {name}: {value:.4f} (min {bound})")
+        if value < bound:
+            failures.append(name)
+
+    if "serving_min_goodput_rps" in thr:
+        gate_min("serving.peak_goodput_rps",
+                 float(sv["peak_goodput_rps"]),
+                 thr["serving_min_goodput_rps"])
+    if "serving_overload_p99_ms_max" in thr:
+        p99 = sv["overload_p99_ms"]
+        if p99 is None:
+            # complete starvation at the overload rung: nothing finished
+            print("FAIL serving.overload_p99_ms: no request completed "
+                  "at the overload rung")
+            failures.append("serving.overload_p99_ms")
+        else:
+            gate_max("serving.overload_p99_ms", float(p99),
+                     thr["serving_overload_p99_ms_max"])
+    if "serving_overload_shed_min" in thr:
+        gate_min("serving.overload_shed_rate",
+                 float(sv["overload_shed_rate"]),
+                 thr["serving_overload_shed_min"])
+    if "serving_low_load_shed_max" in thr:
+        gate_max("serving.low_load_shed_rate",
+                 float(sv["low_load_shed_rate"]),
+                 thr["serving_low_load_shed_max"])
+    if sv.get("bit_identical") is not True:
+        print("FAIL serving.bit_identical: concurrent-path scores diverged "
+              "from synchronous score()")
+        failures.append("serving.bit_identical")
+    else:
+        print("ok   serving.bit_identical: concurrent == sequential")
+    return failures
+
+
 _SUMMARIZE_DATASETS = ("gauss", "kdd_like")
 
 
@@ -171,13 +246,20 @@ def main() -> int:
                     default=str(_ROOT / "BENCH_summarize.json"))
     ap.add_argument("--thresholds",
                     default=str(_ROOT / "benchmarks" / "stream_thresholds.json"))
+    ap.add_argument("--require-serving", action="store_true",
+                    help="fail if the bench has no 'serving' section "
+                         "(the serve-load CI lane sets this; a plain "
+                         "bench-smoke run may legitimately omit it)")
     args = ap.parse_args()
     bench = json.loads(Path(args.bench).read_text())
     thr = json.loads(Path(args.thresholds).read_text())
     sb_path = Path(args.summarize_bench)
     summarize_bench = (json.loads(sb_path.read_text())
                        if sb_path.exists() else None)
-    failures = check(bench, thr) + check_summarize(summarize_bench, thr)
+    failures = (check(bench, thr)
+                + check_serving(bench, thr,
+                                require_serving=args.require_serving)
+                + check_summarize(summarize_bench, thr))
     if failures:
         print(f"regression gate FAILED: {', '.join(failures)}",
               file=sys.stderr)

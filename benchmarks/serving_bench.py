@@ -1,0 +1,224 @@
+"""Serving-scheduler load benchmark: goodput vs offered load, under CI.
+
+Drives the async serving layer (``repro.serve``) the way the serve-load
+CI lane does: fit a stream-topology :class:`repro.api.Session` on the
+synthetic Gaussian workload, attach the continuous-batching scheduler,
+estimate closed-loop capacity, then walk an **open-loop offered-load
+ladder** through ``repro.serve.loadgen.run_load`` — multiple client
+threads pacing submissions on a wall clock so offered load can exceed
+capacity and the report shows what admission control does with the
+excess (goodput flat, shed rate up, p99 bounded) instead of the
+closed-loop illusion where offered load silently collapses to capacity.
+
+The result is merged as the ``"serving"`` section of
+``BENCH_stream.json`` (load-modify-write: the kernel/obs/sharded
+sections written by ``stream_bench.py`` survive).  Headline keys the
+regression gate (``check_stream_regression.py``) reads:
+
+* ``peak_goodput_rps``   — best completed-rows/s across the ladder;
+* ``overload_p99_ms``    — completed-request p99 at the highest rung
+  (admission control must keep it bounded while shedding);
+* ``overload_shed_rate`` — shed fraction at the highest rung (must be
+  shedding: that is the mechanism that bounds p99);
+* ``low_load_shed_rate`` — shed fraction at the lowest rung (a healthy
+  scheduler sheds ~nothing below capacity);
+* ``bit_identical``      — concurrent-path scores equal the synchronous
+  ``score()`` results bit for bit.
+
+Modes: ``--mode smoke`` (PR lane: 3 rungs, ~5s of load) and ``--mode
+full`` (nightly: 7-rung saturation sweep + a two-tenant fairness rung
+under quota).  ``--snapshot-out`` dumps the post-load ``repro.obs``
+snapshot for ``check_obs_snapshot.py --require-set serving``.
+
+    PYTHONPATH=src:. python benchmarks/serving_bench.py --mode smoke \
+        [--snapshot-out /tmp/serving_snap.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro import Session, pipeline_config
+from repro.data.synthetic import gauss
+from repro.serve import (ServingScheduler, ServingSpec, estimate_capacity,
+                         run_load)
+
+_DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_stream.json"
+
+# smoke fits the PR lane (~tens of seconds wall including jit warmup);
+# full is the nightly saturation sweep
+_MODES = {
+    "smoke": dict(per_center=800, clients=6, rung_s=1.2,
+                  ladder=(0.4, 1.0, 2.0), capacity_s=0.4, fairness=False),
+    "full": dict(per_center=2500, clients=16, rung_s=3.0,
+                 ladder=(0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0),
+                 capacity_s=0.8, fairness=True),
+}
+
+
+def _bit_identity(session: Session, queries: np.ndarray) -> bool:
+    """Concurrent-path scores vs synchronous ``score()`` on the same rows.
+    The padded static-shape micro-batch makes each row independent of its
+    tick's composition, so these must match bitwise."""
+    sync = session.score(queries)
+    conc = list(session.score_stream(queries, timeout=60.0))
+    return all(
+        a.center == b.center and a.distance == b.distance
+        and a.outlier_score == b.outlier_score and a.is_outlier == b.is_outlier
+        for a, b in zip(sync, conc))
+
+
+def _fairness_rung(session: Session, queries: np.ndarray, *,
+                   capacity: float, clients: int, rung_s: float,
+                   seed: int) -> dict:
+    """Two equal tenants at 2x capacity under a half-queue quota: neither
+    tenant can crowd the other out of the bounded queue, so completed
+    counts stay comparable.  ``completed_min_max_ratio`` is the fairness
+    score (1.0 = perfectly even)."""
+    spec = ServingSpec(queue_bound=256, tenant_quota=128,
+                       batch_window_ms=1.0, shed_policy="shed")
+    with ServingScheduler(session.engine, spec) as sched:
+        rep = run_load(sched, queries, offered_rps=2.0 * capacity,
+                       clients=max(2, clients), duration_s=rung_s,
+                       tenants=("tenant-a", "tenant-b"), seed=seed + 31)
+    done = [v["completed"] for v in rep["per_tenant"].values()]
+    rep["completed_min_max_ratio"] = (
+        round(min(done) / max(done), 4) if done and max(done) else 0.0)
+    rep["tenant_quota"] = spec.tenant_quota
+    return rep
+
+
+def serving_section(mode: str = "smoke", seed: int = 0,
+                    clients: int | None = None) -> dict:
+    """Run the ladder; returns the ``"serving"`` section dict."""
+    m = _MODES[mode]
+    clients = clients if clients else m["clients"]
+    k, d = 20, 5
+    t = max(m["per_center"] * k // 100, 40)
+    x, _ = gauss(n_centers=k, per_center=m["per_center"], d=d, sigma=0.1,
+                 t=t, seed=seed)
+    spec = ServingSpec(queue_bound=512, batch_window_ms=1.0,
+                       shed_policy="shed")
+    cfg = pipeline_config(
+        dim=d, k=k, t=t, topology="stream", leaf_size=4096,
+        refresh_every=max(x.shape[0] // 2, 4096), micro_batch=256,
+        serving=spec, seed=seed)
+    session = Session(cfg)
+    session.fit(x)
+
+    rng = np.random.default_rng(seed + 7)
+    queries = x[rng.choice(x.shape[0], size=min(4096, x.shape[0]),
+                           replace=False)]
+    bit_identical = _bit_identity(session, queries[:64])
+
+    sched = session.serve()
+    sched.submit(queries[:256])           # warm the hot path off the clock
+    sched.flush(timeout=60.0)
+    # closed-loop estimate is an upper bound (one submitter, big bursts,
+    # no pacing overhead); the ladder is anchored on an *open-loop* probe
+    # at that bound — saturating, so its goodput is the sustained
+    # multi-client service rate the rung multipliers are relative to
+    capacity = estimate_capacity(sched, queries,
+                                 duration_s=m["capacity_s"], seed=seed)
+    probe = run_load(sched, queries, offered_rps=capacity, clients=clients,
+                     duration_s=m["capacity_s"], seed=seed + 17)
+    sustained = max(probe["goodput_rps"], 1.0)
+    ladder = []
+    for mult in m["ladder"]:
+        rep = run_load(sched, queries, offered_rps=mult * sustained,
+                       clients=clients, duration_s=m["rung_s"],
+                       seed=seed + int(mult * 100))
+        rep["offered_multiplier"] = mult
+        ladder.append(rep)
+
+    overload = ladder[-1]
+    section = {
+        "mode": mode,
+        "clients": clients,
+        "n_fit": int(x.shape[0]),
+        "queue_bound": spec.queue_bound,
+        "batch_window_ms": spec.batch_window_ms,
+        "shed_policy": spec.shed_policy,
+        "capacity_rps_est": round(capacity, 1),
+        "sustained_rps_probe": round(sustained, 1),
+        "ladder": ladder,
+        "peak_goodput_rps": max(r["goodput_rps"] for r in ladder),
+        "overload_offered_multiplier": overload["offered_multiplier"],
+        "overload_p99_ms": overload["p99_ms"],
+        "overload_shed_rate": overload["shed_rate"],
+        "low_load_shed_rate": ladder[0]["shed_rate"],
+        "peak_queue_depth": int(sched.peak_depth),
+        "bit_identical": bool(bit_identical),
+    }
+    if m["fairness"]:
+        section["fairness"] = _fairness_rung(
+            session, queries, capacity=sustained, clients=clients,
+            rung_s=m["rung_s"], seed=seed)
+    session.close()
+    return section
+
+
+def merge_out(section: dict, out_path) -> None:
+    """Attach the section to ``BENCH_stream.json`` without disturbing the
+    sections ``stream_bench.py`` wrote (load-modify-write)."""
+    path = Path(out_path)
+    doc = json.loads(path.read_text()) if path.exists() else {}
+    doc["serving"] = section
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
+def report(section: dict) -> None:
+    print(f"serving [{section['mode']}]: {section['clients']} clients, "
+          f"queue_bound={section['queue_bound']} "
+          f"shed_policy={section['shed_policy']} "
+          f"window={section['batch_window_ms']}ms")
+    print(f"  capacity ~{section['capacity_rps_est']:,.0f} rows/s "
+          f"closed-loop; sustained ~{section['sustained_rps_probe']:,.0f} "
+          f"rows/s open-loop (ladder anchor)")
+    for r in section["ladder"]:
+        p99 = f"{r['p99_ms']:.1f}" if r["p99_ms"] is not None else "-"
+        print(f"  {r['offered_multiplier']:>5.2f}x offered "
+              f"{r['offered_rps']:>10,.0f} -> goodput "
+              f"{r['goodput_rps']:>10,.0f} rows/s  shed "
+              f"{r['shed_rate']:>6.1%}  p99 {p99} ms")
+    print(f"  peak goodput {section['peak_goodput_rps']:,.0f} rows/s; "
+          f"overload p99 {section['overload_p99_ms']:.1f} ms at "
+          f"{section['overload_shed_rate']:.1%} shed; "
+          f"bit_identical={section['bit_identical']}")
+    if "fairness" in section:
+        f = section["fairness"]
+        per = ", ".join(f"{t}: {v['completed']}/{v['submitted']}"
+                        for t, v in sorted(f["per_tenant"].items()))
+        print(f"  fairness @2x, quota {f['tenant_quota']}: {per} "
+              f"(min/max completed {f['completed_min_max_ratio']:.3f})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=sorted(_MODES), default="smoke")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clients", type=int, default=0,
+                    help="override the mode's client-thread count")
+    ap.add_argument("--out", default=str(_DEFAULT_OUT),
+                    help="BENCH_stream.json to merge the section into")
+    ap.add_argument("--snapshot-out", default=None,
+                    help="also dump the post-load repro.obs snapshot "
+                         "(for check_obs_snapshot.py --require-set serving)")
+    args = ap.parse_args()
+    section = serving_section(mode=args.mode, seed=args.seed,
+                              clients=args.clients)
+    report(section)
+    if args.snapshot_out:
+        from repro import obs
+        Path(args.snapshot_out).write_text(
+            json.dumps(obs.snapshot(), indent=2, sort_keys=True) + "\n")
+        print(f"wrote obs snapshot to {args.snapshot_out}")
+    merge_out(section, args.out)
+    print(f"merged 'serving' section into {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,11 @@ The result always carries a ``"kernels"`` section: per-backend
 alongside the service-level ones.  ``benchmarks/roofline.py --kernels``
 annotates the same section with arithmetic-intensity/roofline terms.
 
+With ``--serving smoke|full`` the result additionally gains the
+``"serving"`` section — the async scheduler's goodput-vs-offered-load
+ladder (see ``serving_bench.py``, which can also run standalone and
+merge into the same file).
+
 An ``"obs"`` section measures the telemetry plane's cost: best-of-3
 ingest throughput with metrics enabled vs disabled
 (``repro.obs.set_metrics_enabled``); the regression gate holds the
@@ -213,6 +218,7 @@ def obs_overhead(x, cfg: ServiceConfig, *, repeats: int = 3) -> dict:
 def run(scale: float = 1.0, seed: int = 0,
         policy: KernelPolicy = KernelPolicy(),
         sites: int = 0,
+        serving: str | None = None,
         out_path: Path | str | None = _DEFAULT_OUT) -> dict:
     k, d = 20, 5
     per_center = max(int(2500 * scale), 200)
@@ -286,6 +292,9 @@ def run(scale: float = 1.0, seed: int = 0,
         result["sharded"] = run_sharded(
             x, oneshot_cost, sites=sites, k=k, t=t, seed=seed,
             policy=policy)
+    if serving is not None:
+        from serving_bench import serving_section
+        result["serving"] = serving_section(mode=serving, seed=seed)
     if out_path is not None:
         Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
     return result
@@ -302,11 +311,14 @@ def main() -> None:
                     help="autotune block_n per shape-bucket (cached on disk)")
     ap.add_argument("--sites", type=int, default=0,
                     help="also run the sharded service over N sites")
+    ap.add_argument("--serving", choices=["smoke", "full"], default=None,
+                    help="also run the async serving-scheduler load ladder "
+                         "(see serving_bench.py) into a 'serving' section")
     ap.add_argument("--out", default=str(_DEFAULT_OUT))
     args = ap.parse_args()
     res = run(scale=args.scale, seed=args.seed,
               policy=KernelPolicy(backend=args.backend, autotune=args.autotune),
-              sites=args.sites, out_path=args.out)
+              sites=args.sites, serving=args.serving, out_path=args.out)
     print(f"n={res['n']} (k={res['k']}, t={res['t']})")
     print(f"ingest : {res['ingest_pts_per_s']:,.0f} pts/s "
           f"({res['ingest_s']:.2f}s incl. cadence refreshes)")
@@ -340,6 +352,9 @@ def main() -> None:
         print(f"  query p50 {sh['query_p50_ms']:.2f} ms  "
               f"p99 {sh['query_p99_ms']:.2f} ms   "
               f"cost ratio {sh['cost_ratio']:.3f}")
+    if "serving" in res:
+        from serving_bench import report as serving_report
+        serving_report(res["serving"])
     print(f"wrote {args.out}")
 
 

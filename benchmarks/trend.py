@@ -17,7 +17,8 @@ Each line:
     {"ts": "...", "commit": "...", "label": "...",
      "stream": {ingest_pts_per_s, query_p50_ms, query_p99_ms, cost_ratio,
                 obs_overhead_frac?, sharded_cost_ratio?,
-                sharded_comm_bytes?},
+                sharded_comm_bytes?, serving_peak_goodput_rps?,
+                serving_overload_p99_ms?, serving_overload_shed_rate?},
      "kernels": {"<op>.<backend>": pts_per_s, ...},
      "summarize": {"<dataset>.<name>": {"recall": .., "l2_ratio": ..}, ...}}
 """
@@ -67,6 +68,15 @@ def stream_point(bench: dict) -> dict:
     if sh:
         pt["sharded_cost_ratio"] = round(float(sh["cost_ratio"]), 4)
         pt["sharded_comm_bytes"] = int(sh["refresh_comm_bytes"])
+    sv = bench.get("serving")
+    if sv:
+        pt["serving_peak_goodput_rps"] = round(
+            float(sv["peak_goodput_rps"]), 1)
+        if sv.get("overload_p99_ms") is not None:
+            pt["serving_overload_p99_ms"] = round(
+                float(sv["overload_p99_ms"]), 3)
+        pt["serving_overload_shed_rate"] = round(
+            float(sv["overload_shed_rate"]), 4)
     return pt
 
 

@@ -14,7 +14,9 @@ the contract (CI asserts every name resolves).  Four groups:
   their own pipelines: Summary-Outliers, weighted summaries, the stream
   tree, k-means--, and the coordinator entry points.
 * **serving + persistence** — the stream services, their configs, the
-  model/result records and the checkpoint manager.
+  model/result records, the async serving layer (``ServingSpec`` knobs,
+  ``ServingScheduler``, typed ``ShedReject`` — ``repro.serve``) and the
+  checkpoint manager.
 * **observability** — the process metrics registry (``repro.obs``):
   ``Session.stats()`` snapshots it, ``trace``/``counter``/``gauge``/
   ``histogram`` feed it, ``render_prometheus`` formats it for scraping,
@@ -45,6 +47,9 @@ from repro.stream import (
     ShardedServiceConfig, ShardedStreamService, StreamService, StreamTree,
     TreeConfig, WeightedSummary, weighted_summary_outliers,
 )
+from repro.serve import (
+    ScoreTicket, ServingScheduler, ServingSpec, ShedReject,
+)
 from repro.checkpoint.manager import CheckpointManager
 from repro.obs import (
     MetricsRegistry, render_prometheus, set_metrics_enabled, using_registry,
@@ -67,6 +72,7 @@ __all__ = [
     # serving + persistence
     "BaseServiceConfig", "ServiceConfig", "ShardedServiceConfig",
     "StreamService", "ShardedStreamService", "ModelState", "QueryResult",
+    "ServingSpec", "ServingScheduler", "ScoreTicket", "ShedReject",
     "CheckpointManager",
     # observability
     "MetricsRegistry", "render_prometheus", "set_metrics_enabled",

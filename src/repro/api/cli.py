@@ -20,7 +20,10 @@ Subcommands:
                     outlier quality, optionally ``--save`` the session;
 * ``serve``       — stream the data in batches through a stream/sharded
                     session (cadence refreshes), score sample queries,
-                    report latency, optionally ``--checkpoint``;
+                    report latency, optionally ``--checkpoint``; with
+                    ``--clients N`` it then saturates the async serving
+                    scheduler (``repro.serve``) with N open-loop client
+                    threads and reports goodput / shed rate / p99;
 * ``bench-score`` — fit, then measure the query path (p50/p99 latency and
                     throughput over ``--repeat`` rounds of ``--queries``);
 * ``stats``       — fit + score like ``run``, then emit the full metrics
@@ -225,6 +228,9 @@ def cmd_serve(args) -> None:
     stats = session.latency_stats()
     print(f"  query latency: p50 {stats['p50_ms']:.2f} ms, "
           f"p99 {stats['p99_ms']:.2f} ms over {stats['count']} requests")
+    if args.clients:
+        _serve_load_phase(session, x, args)
+        emitter.emit(session)
     if session.last_fit is not None:
         print(f"  last refresh: v{session.last_fit.version} fit in "
               f"{session.last_fit.fit_s * 1e3:.1f} ms on "
@@ -238,6 +244,37 @@ def cmd_serve(args) -> None:
     emitter.emit(session, force=True)
     emitter.close()
     print("ok")
+
+
+def _serve_load_phase(session, x, args) -> None:
+    """``serve --clients N``: saturate the async scheduler with an
+    open-loop multi-client load phase and report goodput / shed / p99."""
+    from repro.serve import estimate_capacity, run_load
+
+    sched = session.serve()
+    spec = sched.spec
+    rng = np.random.default_rng(session.config.seed + 7)
+    queries = x[rng.choice(x.shape[0], size=min(4096, x.shape[0]),
+                           replace=False)]
+    offered = args.offered_rps
+    if offered is None:
+        cap = estimate_capacity(sched, queries, duration_s=0.3)
+        offered = 1.5 * cap   # past saturation: show admission control work
+        print(f"  load: capacity ~{cap:.0f} rows/s (closed-loop); "
+              f"offering 1.5x = {offered:.0f} rows/s")
+    print(f"  load: {args.clients} clients, {args.load_seconds}s, "
+          f"queue_bound={spec.queue_bound} shed_policy={spec.shed_policy} "
+          f"batch_window={spec.batch_window_ms}ms")
+    rep = run_load(sched, queries, offered_rps=offered,
+                   clients=args.clients, duration_s=args.load_seconds,
+                   seed=session.config.seed)
+    print(f"  load: offered {rep['offered_rps']:.0f} rows/s -> goodput "
+          f"{rep['goodput_rps']:.0f} rows/s, shed rate "
+          f"{rep['shed_rate']:.1%} ({rep['shed']}/{rep['submitted']})")
+    if rep["p99_ms"] is not None:
+        print(f"  load: completed-request latency p50 {rep['p50_ms']:.2f} ms"
+              f", p99 {rep['p99_ms']:.2f} ms")
+    session.close()
 
 
 def cmd_bench_score(args) -> None:
@@ -320,6 +357,15 @@ def main(argv=None) -> None:
     p_srv.add_argument("--metrics-out", default="-",
                        help="destination for --metrics-interval lines "
                             "(file path, or '-' for stdout)")
+    p_srv.add_argument("--clients", type=int, default=0,
+                       help="after streaming, drive the async serving "
+                            "scheduler with N open-loop client threads and "
+                            "report goodput / shed rate / p99 (0 = skip)")
+    p_srv.add_argument("--load-seconds", type=float, default=2.0,
+                       help="duration of the --clients load phase")
+    p_srv.add_argument("--offered-rps", type=float, default=None,
+                       help="offered load (rows/s) for the --clients phase; "
+                            "default: 1.5x a measured capacity estimate")
     p_srv.set_defaults(fn=cmd_serve)
 
     p_bs = sub.add_parser("bench-score", help="measure the query path")

@@ -41,6 +41,7 @@ from typing import Optional
 from repro.kernels.dispatch import (KernelPolicy, get_default_policy,
                                     BACKENDS)
 from repro.kernels.pdist.ref import METRICS
+from repro.serve.spec import SHED_POLICIES, ServingSpec
 from repro.stream.service import ServiceConfig
 from repro.stream.sharded import ShardedServiceConfig
 from repro.summarize.base import (SummarizerPolicy, get_default_summarizer,
@@ -156,12 +157,19 @@ class PipelineConfig:
     kernels: Optional[KernelPolicy] = None
     second_iters: int = 25           # second-level k-means-- iterations
     seed: int = 0
+    # None = serve with ServingSpec() defaults when score_stream is used;
+    # set explicitly to pin admission control / batching in the artifact
+    serving: Optional[ServingSpec] = None
 
     def __post_init__(self):
         _require(isinstance(self.problem, ProblemSpec),
                  f"problem must be a ProblemSpec, got {self.problem!r}")
         _require(isinstance(self.topology, TopologySpec),
                  f"topology must be a TopologySpec, got {self.topology!r}")
+        _require(self.serving is None
+                 or isinstance(self.serving, ServingSpec),
+                 f"serving must be a ServingSpec or None, "
+                 f"got {self.serving!r}")
         if self.summarizer is None:
             object.__setattr__(self, "summarizer", get_default_summarizer())
         if self.kernels is None:
@@ -185,8 +193,10 @@ class PipelineConfig:
 
     # --------------------------------------------------------- serialization
     def to_dict(self) -> dict:
-        """Exact, JSON-scalar dict image (``from_dict`` inverts it)."""
-        return {
+        """Exact, JSON-scalar dict image (``from_dict`` inverts it).  The
+        ``serving`` section appears only when set — configs written before
+        it existed stay byte-identical."""
+        d = {
             "version": _CONFIG_VERSION,
             "problem": dataclasses.asdict(self.problem),
             "topology": dataclasses.asdict(self.topology),
@@ -198,6 +208,9 @@ class PipelineConfig:
             "second_iters": self.second_iters,
             "seed": self.seed,
         }
+        if self.serving is not None:
+            d["serving"] = dataclasses.asdict(self.serving)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "PipelineConfig":
@@ -217,12 +230,13 @@ class PipelineConfig:
             kernels = d.pop("kernels", None)
             second_iters = d.pop("second_iters", 25)
             seed = d.pop("seed", 0)
+            serving = d.pop("serving", None)
         except KeyError as e:
             raise ValueError(f"config is missing required section {e}")
         if d:
             raise ValueError(f"unknown config keys {sorted(d)}; expected "
                              f"problem/topology/summarizer/kernels/"
-                             f"second_iters/seed")
+                             f"second_iters/seed/serving")
         return cls(
             problem=_spec_from(ProblemSpec, "problem", problem),
             topology=_spec_from(TopologySpec, "topology", topology),
@@ -230,6 +244,7 @@ class PipelineConfig:
             kernels=_kernels_from(kernels),
             second_iters=second_iters,
             seed=seed,
+            serving=_serving_from(serving),
         )
 
     def to_json(self, *, indent: int = 2) -> str:
@@ -299,6 +314,19 @@ def _summarizer_from(d) -> Optional[SummarizerPolicy]:
     return SummarizerPolicy(d.get("name", "auto"), pairs)
 
 
+def _serving_from(d) -> Optional[ServingSpec]:
+    if d is None or isinstance(d, ServingSpec):
+        return d
+    if isinstance(d, str):
+        # bare policy name: "shed" / "wait" with default bounds
+        if d not in SHED_POLICIES:
+            raise ValueError(f"serving must be a shed policy in "
+                             f"{SHED_POLICIES} or a ServingSpec dict, "
+                             f"got {d!r}")
+        return ServingSpec(shed_policy=d)
+    return _spec_from(ServingSpec, "serving", d)
+
+
 def _kernels_from(d) -> Optional[KernelPolicy]:
     if d is None or isinstance(d, KernelPolicy):
         return d
@@ -323,6 +351,7 @@ def pipeline_config(
     kernels=None,
     second_iters: int = 25,
     seed: int = 0,
+    serving=None,
     **topology_kwargs,
 ) -> PipelineConfig:
     """Flat-keyword constructor — the ergonomic front door.
@@ -330,7 +359,9 @@ def pipeline_config(
     ``topology`` is the kind; any remaining keywords are ``TopologySpec``
     fields (``sites=``, ``window=``, ``refresh_every=``, ...).
     ``summarizer`` / ``kernels`` also accept bare names
-    (``summarizer="coreset"``, ``kernels="pallas"``).
+    (``summarizer="coreset"``, ``kernels="pallas"``); ``serving`` accepts
+    a :class:`repro.serve.ServingSpec`, a ``{queue_bound, ...}`` dict, or
+    a bare shed policy name (``serving="wait"``).
 
         cfg = pipeline_config(dim=5, k=20, t=500, topology="sharded",
                               sites=4, window=100_000)
@@ -343,4 +374,5 @@ def pipeline_config(
         kernels=_kernels_from(kernels),
         second_iters=second_iters,
         seed=seed,
+        serving=_serving_from(serving),
     )

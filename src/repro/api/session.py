@@ -9,6 +9,8 @@ one interface:
     ingest(points)   feed raw points (stream topologies refresh on cadence)
     refresh()        (re)fit the serving model on everything ingested
     score(queries)   nearest-center distance / outlier score per query row
+    score_stream(queries)  the same scores through the async serving path
+                     (continuous batching + admission control, repro.serve)
     save(dir)        checkpoint everything, config embedded in the manifest
     Session.load(dir)  rebuild topology + policies from the manifest alone
 
@@ -28,8 +30,9 @@ same ``QueryResult`` surface and latency accounting.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Optional
+from typing import Iterator, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +43,9 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.collective import sites_mesh
 from repro.core.distributed import distributed_cluster, simulate_coordinator
 from repro.kernels.pdist.ops import min_argmin
-from repro.stream.service import (ModelState, ServiceConfig, ServingFrontEnd,
-                                  StreamService)
+from repro.serve.scheduler import ScoreTicket, ServingScheduler, ShedReject
+from repro.stream.service import (ModelState, QueryResult, ServiceConfig,
+                                  ServingFrontEnd, StreamService)
 from repro.stream.sharded import ShardedStreamService
 
 
@@ -244,6 +248,7 @@ class Session:
 
     def __init__(self, config: PipelineConfig, *, _engine=None):
         self.config = config
+        self._serving: Optional[ServingScheduler] = None
         if _engine is not None:
             self.engine = _engine
         else:
@@ -255,6 +260,66 @@ class Session:
             else:
                 self.engine = OneshotEngine(config)
 
+    # ------------------------------------------------------------ serving
+    @property
+    def serving(self) -> Optional[ServingScheduler]:
+        """The attached async scheduler — None until the first
+        :meth:`score_stream` call (or explicit :meth:`serve`)."""
+        return self._serving
+
+    def serve(self) -> ServingScheduler:
+        """Attach (and return) the continuous-batching scheduler for this
+        session's engine, configured by ``config.serving`` (defaults apply
+        when the config has no serving section).  Idempotent; once a
+        scheduler is attached, the synchronous verbs route through its
+        ``engine_lock`` so direct ``score``/``refresh`` calls and worker
+        ticks never interleave on the engine."""
+        if self._serving is None:
+            self._serving = ServingScheduler(self.engine, self.config.serving)
+        return self._serving
+
+    def score_stream(self, queries, *, tenant: str = "default",
+                     timeout: Optional[float] = None,
+                     ) -> Iterator[Union[QueryResult, ShedReject]]:
+        """Score rows through the async serving path.
+
+        Rows are admitted (and possibly shed) *now*, on the caller's
+        thread — many threads calling ``score_stream`` concurrently share
+        one scheduler, and their rows coalesce into common worker ticks.
+        Returns an iterator yielding, per row in order, the engine's
+        ``QueryResult`` or a typed :class:`ShedReject`; iterate to block
+        on completion.  Scores are bit-identical to :meth:`score`.
+        """
+        tickets = self.serve().submit(queries, tenant=tenant)
+        return (t.result(timeout) for t in tickets)
+
+    def submit_stream(self, queries, *, tenant: str = "default",
+                      ) -> "list[ScoreTicket]":
+        """Like :meth:`score_stream` but returns the raw tickets, for
+        callers that want ``done()`` polling or per-ticket latency."""
+        return self.serve().submit(queries, tenant=tenant)
+
+    def close(self) -> None:
+        """Drain and stop the serving scheduler, if one is attached.
+        The session's synchronous verbs keep working afterwards."""
+        if self._serving is not None:
+            self._serving.close()
+            self._serving = None
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def _engine_guard(self):
+        """The scheduler's engine lock when serving is attached (direct
+        verbs must not interleave with worker ticks), else a no-op."""
+        if self._serving is not None:
+            return self._serving.engine_lock
+        return contextlib.nullcontext()
+
     # ------------------------------------------------------------ verbs
     def ingest(self, points, weights=None, *, site: int | None = None) -> None:
         """Feed raw points.  ``site=`` pins a batch to one site (sharded
@@ -264,24 +329,29 @@ class Session:
                 raise ValueError(
                     f"site= routing needs topology.kind='sharded', this "
                     f"session is {self.config.topology.kind!r}")
-            self.engine.ingest(points, weights, site=site)
+            with self._engine_guard():
+                self.engine.ingest(points, weights, site=site)
         else:
-            self.engine.ingest(points, weights)
+            with self._engine_guard():
+                self.engine.ingest(points, weights)
 
     def refresh(self, *, blocking: bool = True) -> Optional[ModelState]:
         """(Re)fit the serving model on everything ingested so far."""
-        return self.engine.refresh(blocking=blocking)
+        with self._engine_guard():
+            return self.engine.refresh(blocking=blocking)
 
     def fit(self, points=None, weights=None) -> ModelState:
         """``ingest`` (optional) + blocking ``refresh`` in one call."""
         if points is not None:
             self.ingest(points, weights)
-        return self.engine.refresh(blocking=True)
+        with self._engine_guard():
+            return self.engine.refresh(blocking=True)
 
     def score(self, queries) -> list:
         """Score query rows against the current model; returns the same
         ``QueryResult`` records every topology's read path produces."""
-        return self.engine.score(queries)
+        with self._engine_guard():
+            return self.engine.score(queries)
 
     def latency_stats(self) -> dict:
         return self.engine.latency_stats()
@@ -329,8 +399,10 @@ class Session:
         if step is None:
             latest = manager.latest_step()
             step = (latest + 1) if latest is not None else 1
-        self.engine.save(manager, step, blocking=blocking,
-                         extra_meta={"pipeline_config": self.config.to_dict()})
+        with self._engine_guard():
+            self.engine.save(
+                manager, step, blocking=blocking,
+                extra_meta={"pipeline_config": self.config.to_dict()})
         return step
 
     @classmethod

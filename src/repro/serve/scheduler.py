@@ -1,0 +1,348 @@
+"""Continuous-batching scheduler with admission control over one engine.
+
+The scheduler/worker split in front of ``ServingFrontEnd``: many client
+threads ``submit()`` score requests concurrently; a single worker thread
+pops them in ticks — lingering up to ``batch_window_ms`` so requests from
+*different* clients coalesce — and scores each tick through the engine's
+existing micro-batched read path (one jitted pdist call per micro-batch,
+padded to a static shape, so the hot path never retraces).  Because the
+scoring kernel computes every row independently and every micro-batch is
+padded to the same static shape, a row's result is bit-identical no
+matter which requests it shared a tick with — the concurrent path returns
+exactly what sequential ``submit``+``drain`` would (asserted in
+``tests/test_serving.py``).
+
+Admission control (:class:`repro.serve.spec.ServingSpec`):
+
+* the queue is bounded by ``queue_bound``; when full, ``shed_policy``
+  either resolves the request *immediately* with a typed
+  :class:`ShedReject` (``"shed"`` — overload costs goodput, not p99) or
+  blocks the submitting client until space frees (``"wait"`` —
+  backpressure);
+* ``tenant_quota`` caps any one tenant's share of the queue, so a noisy
+  tenant saturates its quota, not the service.
+
+Every admitted request yields a :class:`ScoreTicket`; ``ticket.result()``
+returns the engine's ``QueryResult`` (or the ``ShedReject``), re-raising
+a worker-side failure on the *caller's* thread — a poison request never
+kills the worker loop.
+
+Telemetry (``repro.obs``): ``serve.queue_depth`` gauge,
+``serve.admitted{tenant=}`` / ``serve.completed{tenant=}`` /
+``serve.shed{tenant=,reason=}`` counters, ``serve.batch_occupancy``
+histogram (batched rows / max_batch per tick), ``serve.ticks`` counter,
+and per-tenant end-to-end latency in
+``serve.latency{tenant=,topology=scheduler}``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro import obs
+from repro.serve.spec import ServingSpec
+
+# occupancy is a fraction of max_batch — latency buckets would waste edges
+_OCCUPANCY_BUCKETS = (0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0)
+
+
+class ShedReject(NamedTuple):
+    """Typed admission rejection — a *result*, not an exception.
+
+    ``reason`` is ``"queue_full"`` (the shared queue hit ``queue_bound``),
+    ``"tenant_quota"`` (this tenant hit its quota) or ``"shutdown"`` (the
+    scheduler was closed while the request waited for admission).
+    ``queue_depth`` is the depth observed at the rejection.
+    """
+    request_id: int
+    tenant: str
+    reason: str
+    queue_depth: int
+
+
+class ScoreTicket:
+    """One submitted row's pending result.
+
+    ``result()`` blocks until the worker resolves the ticket and returns
+    either the engine's ``QueryResult`` or a :class:`ShedReject`; a
+    worker-side exception is re-raised here, on the caller's thread.
+    """
+
+    __slots__ = ("request_id", "tenant", "t_submit", "t_done",
+                 "_event", "_value", "_error")
+
+    def __init__(self, request_id: int, tenant: str):
+        self.request_id = request_id
+        self.tenant = tenant
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def _resolve(self, value) -> None:
+        self.t_done = time.perf_counter()
+        self._value = value
+        self._event.set()
+
+    def _fail(self, error: BaseException) -> None:
+        self.t_done = time.perf_counter()
+        self._error = error
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not scored within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    @property
+    def shed(self) -> bool:
+        return isinstance(self._value, ShedReject)
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Admission -> resolution wall time (None while pending)."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+
+class ServingScheduler:
+    """Async request queue + worker loop over one ``ServingFrontEnd``.
+
+    The scheduler *owns* its engine's read path: every engine access —
+    the worker's per-tick ``submit``/``drain``, but also any synchronous
+    caller going around the queue (``Session.score`` / ``ingest`` /
+    ``refresh`` while serving is active) — must hold ``engine_lock``.
+    The ``Session`` facade routes its verbs through that lock whenever a
+    scheduler is attached.
+
+    The worker thread starts lazily on the first ``submit`` (or via
+    ``start()``); ``close()`` drains what was already admitted, resolves
+    every ticket, and joins the worker.  A scheduler with
+    ``autostart=False`` queues without scoring until ``start()`` — tests
+    use this to exercise admission control deterministically.
+    """
+
+    def __init__(self, engine, spec: Optional[ServingSpec] = None, *,
+                 autostart: bool = True):
+        self.engine = engine
+        self.spec = spec if spec is not None else ServingSpec()
+        self.engine_lock = threading.RLock()
+        self.max_batch = (self.spec.max_batch
+                          if self.spec.max_batch is not None
+                          else int(engine.cfg.micro_batch))
+        self._cond = threading.Condition()
+        self._queue: deque = deque()        # (ticket, row (d,) f32)
+        self._pending: dict[str, int] = {}  # queued-per-tenant (quota)
+        self._inflight = 0                  # popped, not yet resolved
+        self._next_id = 0
+        self._stop = False
+        self._autostart = autostart
+        self._worker: Optional[threading.Thread] = None
+        self.peak_depth = 0                 # high-water mark of len(_queue)
+        # ---------------------------------------------------------- metrics
+        self._depth_gauge = obs.gauge("serve.queue_depth")
+        self._depth_gauge.set_fn(lambda: len(self._queue))
+        self._ticks = obs.counter("serve.ticks")
+        self._occupancy = obs.histogram("serve.batch_occupancy",
+                                        buckets=_OCCUPANCY_BUCKETS)
+        self._worker_errors = obs.counter("serve.worker_errors")
+        self._by_tenant: dict = {}
+        self._shed_counters: dict = {}
+
+    def _tenant_metrics(self, tenant: str):
+        m = self._by_tenant.get(tenant)
+        if m is None:
+            m = (obs.counter("serve.admitted", tenant=tenant),
+                 obs.counter("serve.completed", tenant=tenant),
+                 obs.histogram("serve.latency", tenant=tenant,
+                               topology="scheduler"))
+            self._by_tenant[tenant] = m
+        return m
+
+    def _count_shed(self, tenant: str, reason: str) -> None:
+        c = self._shed_counters.get((tenant, reason))
+        if c is None:
+            c = obs.counter("serve.shed", tenant=tenant, reason=reason)
+            self._shed_counters[(tenant, reason)] = c
+        c.inc()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, points, *, tenant: str = "default") -> list[ScoreTicket]:
+        """Admit query rows; returns one (possibly pre-resolved) ticket per
+        row, in row order.  Validation errors raise here, on the caller —
+        a malformed row never reaches the worker."""
+        x, _ = self.engine._validate_points(points, None)
+        # start the worker *before* admission: a "wait"-policy submit
+        # larger than the queue bound blocks until ticks free space, which
+        # only a running worker can do
+        if self._worker is None and self._autostart:
+            self.start()
+        admitted_c, _, _ = self._tenant_metrics(tenant)
+        spec = self.spec
+        tickets: list[ScoreTicket] = []
+        n_admitted = 0
+        with self._cond:
+            for row in x:
+                ticket = ScoreTicket(self._next_id, tenant)
+                self._next_id += 1
+                tickets.append(ticket)
+                if self._stop:
+                    ticket._resolve(ShedReject(ticket.request_id, tenant,
+                                               "shutdown", len(self._queue)))
+                    self._count_shed(tenant, "shutdown")
+                    continue
+                reason = self._admission_block(tenant)
+                if reason is not None and spec.shed_policy == "wait":
+                    while reason is not None and not self._stop:
+                        self._cond.wait(0.05)
+                        reason = self._admission_block(tenant)
+                    if self._stop:
+                        reason = "shutdown"
+                if reason is not None:
+                    ticket._resolve(ShedReject(ticket.request_id, tenant,
+                                               reason, len(self._queue)))
+                    self._count_shed(tenant, reason)
+                    continue
+                self._queue.append((ticket, row))
+                self._pending[tenant] = self._pending.get(tenant, 0) + 1
+                n_admitted += 1
+                if len(self._queue) > self.peak_depth:
+                    self.peak_depth = len(self._queue)
+            if n_admitted:
+                self._cond.notify_all()   # wake the worker (and waiters)
+        if n_admitted:
+            admitted_c.inc(n_admitted)
+        return tickets
+
+    def _admission_block(self, tenant: str) -> Optional[str]:
+        """Why this tenant cannot enqueue right now (None = admitted).
+        Caller holds ``_cond``."""
+        if len(self._queue) >= self.spec.queue_bound:
+            return "queue_full"
+        q = self.spec.tenant_quota
+        if q is not None and self._pending.get(tenant, 0) >= q:
+            return "tenant_quota"
+        return None
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------ worker
+    def start(self) -> None:
+        """Start the worker thread (idempotent)."""
+        with self._cond:
+            if self._worker is not None or self._stop:
+                return
+            self._worker = threading.Thread(
+                target=self._loop, name="serve-scheduler", daemon=True)
+            self._worker.start()
+
+    def _loop(self) -> None:
+        window_s = self.spec.batch_window_ms / 1e3
+        while True:
+            with self._cond:
+                while not self._queue and not self._stop:
+                    self._cond.wait(0.1)
+                if not self._queue and self._stop:
+                    return
+                # continuous batching: linger up to the batch window so
+                # requests arriving from other clients join this tick
+                if window_s > 0 and len(self._queue) < self.max_batch:
+                    deadline = time.perf_counter() + window_s
+                    while len(self._queue) < self.max_batch:
+                        remaining = deadline - time.perf_counter()
+                        if remaining <= 0 or self._stop:
+                            break
+                        self._cond.wait(remaining)
+                take = min(self.max_batch, len(self._queue))
+                batch = [self._queue.popleft() for _ in range(take)]
+                for ticket, _ in batch:
+                    self._pending[ticket.tenant] -= 1
+                self._inflight += take
+                self._cond.notify_all()   # queue space freed: wake waiters
+            try:
+                self._score_batch(batch)
+            finally:
+                with self._cond:
+                    self._inflight -= len(batch)
+                    self._cond.notify_all()
+
+    def _score_batch(self, batch) -> None:
+        """One tick: score the popped requests through the engine's
+        micro-batched read path and resolve their tickets.  Engine errors
+        resolve the tick's tickets (re-raised at ``result()``) and leave
+        the loop alive for the next tick."""
+        self._ticks.inc()
+        self._occupancy.observe(len(batch) / self.max_batch)
+        rows = np.stack([row for _, row in batch])
+        try:
+            with self.engine_lock:
+                self.engine.submit(rows)
+                results = self.engine.drain()
+        except BaseException as e:
+            self._worker_errors.inc()
+            for ticket, _ in batch:
+                ticket._fail(e)
+            return
+        for (ticket, _), res in zip(batch, results):
+            ticket._resolve(res)
+            _, completed_c, lat_h = self._tenant_metrics(ticket.tenant)
+            completed_c.inc()
+            lat_h.observe(ticket.latency_s)
+
+    # ------------------------------------------------------------ lifecycle
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until everything admitted so far is resolved.  Returns
+        False on timeout (queue or in-flight work remains)."""
+        if self._worker is None and self._autostart:
+            self.start()
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._cond:
+            while self._queue or self._inflight:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cond.wait(remaining if remaining is not None else 0.1)
+        return True
+
+    def close(self) -> None:
+        """Stop admitting, drain what was admitted, join the worker.
+        Idempotent; afterwards ``submit`` resolves everything as a
+        ``shutdown`` shed."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+            worker = self._worker
+        if worker is not None:
+            worker.join()
+        else:
+            # never started: resolve whatever sits in the queue as shed
+            with self._cond:
+                while self._queue:
+                    ticket, _ = self._queue.popleft()
+                    self._pending[ticket.tenant] -= 1
+                    ticket._resolve(ShedReject(ticket.request_id,
+                                               ticket.tenant, "shutdown", 0))
+                    self._count_shed(ticket.tenant, "shutdown")
+
+    def __enter__(self) -> "ServingScheduler":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

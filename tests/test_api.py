@@ -18,6 +18,10 @@ Contracts under test:
 """
 import dataclasses
 import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import jax
@@ -262,6 +266,73 @@ def test_oneshot_session_matches_distributed_cluster_shard_map(data):
     out = np.asarray(res.outlier_ids)
     assert (sess.result["outlier_ids"] == out[out >= 0]).all()
     assert sess.result["cost"] == float(res.cost)
+
+
+# On a real multi-device mesh the oneshot Session's use_shard_map path
+# must still add no math of its own: same key, same mesh => results equal
+# driving distributed_cluster directly, bit for bit — and a save/load of
+# that session must re-score bitwise.  Mirrors _SHARD_MAP_EQ in
+# tests/test_stream_sharded.py: forced 4-device CPU in a subprocess
+# because XLA_FLAGS must be set before jax initializes.
+_ONESHOT_SHARD_MAP_EQ = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["JAX_DEFAULT_PRNG_IMPL"] = "threefry2x32"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.api import Session, pipeline_config
+    from repro.core import distributed_cluster
+    from repro.core.collective import sites_mesh
+    from repro.data.synthetic import gauss
+
+    x, _ = gauss(n_centers=4, per_center=500, d=3, t=16, sigma=0.05,
+                 seed=11)
+    x = x[: (len(x) // 4) * 4].astype(np.float32)
+    cfg = pipeline_config(dim=3, k=4, t=16, sites=4, use_shard_map=True,
+                          seed=11)
+    sess = Session(cfg)
+    sess.fit(x)
+    res = distributed_cluster(
+        jnp.asarray(x).reshape(4, -1, 3), jax.random.key(11),
+        sites_mesh(4), k=4, t=16, summarizer=cfg.summarizer,
+        policy=cfg.kernels)
+    out = np.asarray(res.outlier_ids)
+    q = x[:64]
+    before = sess.score(q)
+    with tempfile.TemporaryDirectory() as ckpt:
+        sess.save(ckpt)
+        after = Session.load(ckpt).score(q)
+    print(json.dumps({
+        "n_devices": len(jax.devices()),
+        "centers_equal": bool(np.array_equal(
+            sess.result["centers"], np.asarray(res.centers))),
+        "cost_equal": sess.result["cost"] == float(res.cost),
+        "outliers_equal": bool(np.array_equal(
+            sess.result["outlier_ids"], out[out >= 0])),
+        "reload_scores_equal": all(
+            a.center == b.center and a.distance == b.distance
+            and a.outlier_score == b.outlier_score
+            for a, b in zip(before, after)),
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_oneshot_shard_map_session_bit_identical_multi_device_subprocess():
+    """Real 4-device shard_map oneshot Session == direct
+    distributed_cluster on the same mesh, bitwise (plus save/load)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", _ONESHOT_SHARD_MAP_EQ],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_devices"] == 4
+    assert res["centers_equal"] and res["cost_equal"]
+    assert res["outliers_equal"] and res["reload_scores_equal"]
 
 
 def test_stream_session_matches_stream_service(data):
