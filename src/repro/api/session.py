@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import threading
 from typing import Iterator, Optional, Union
 
 import jax
@@ -249,6 +250,7 @@ class Session:
     def __init__(self, config: PipelineConfig, *, _engine=None):
         self.config = config
         self._serving: Optional[ServingScheduler] = None
+        self._attach_lock = threading.Lock()
         if _engine is not None:
             self.engine = _engine
         else:
@@ -273,9 +275,13 @@ class Session:
         when the config has no serving section).  Idempotent; once a
         scheduler is attached, the synchronous verbs route through its
         ``engine_lock`` so direct ``score``/``refresh`` calls and worker
-        ticks never interleave on the engine."""
+        ticks never interleave on the engine.  Safe to race: concurrent
+        first callers attach exactly one scheduler."""
         if self._serving is None:
-            self._serving = ServingScheduler(self.engine, self.config.serving)
+            with self._attach_lock:
+                if self._serving is None:
+                    self._serving = ServingScheduler(self.engine,
+                                                     self.config.serving)
         return self._serving
 
     def score_stream(self, queries, *, tenant: str = "default",
@@ -302,9 +308,10 @@ class Session:
     def close(self) -> None:
         """Drain and stop the serving scheduler, if one is attached.
         The session's synchronous verbs keep working afterwards."""
-        if self._serving is not None:
-            self._serving.close()
-            self._serving = None
+        with self._attach_lock:
+            serving, self._serving = self._serving, None
+        if serving is not None:
+            serving.close()
 
     def __enter__(self) -> "Session":
         return self

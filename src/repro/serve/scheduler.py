@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import threading
 import time
+import weakref
 from collections import deque
 from typing import NamedTuple, Optional
 
@@ -48,6 +49,18 @@ from repro.serve.spec import ServingSpec
 
 # occupancy is a fraction of max_batch — latency buckets would waste edges
 _OCCUPANCY_BUCKETS = (0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0)
+
+# the serve.queue_depth gauge is process-global (one registry, one series),
+# while schedulers come and go with Sessions — so the gauge reads the *sum*
+# over live schedulers rather than whichever instance registered last, and
+# close() (or gc) removes an instance from the sum
+_live_lock = threading.Lock()
+_live_schedulers: "weakref.WeakSet[ServingScheduler]" = weakref.WeakSet()
+
+
+def _total_queue_depth() -> int:
+    with _live_lock:
+        return sum(len(s._queue) for s in _live_schedulers)
 
 
 class ShedReject(NamedTuple):
@@ -152,8 +165,10 @@ class ServingScheduler:
         self._worker: Optional[threading.Thread] = None
         self.peak_depth = 0                 # high-water mark of len(_queue)
         # ---------------------------------------------------------- metrics
+        with _live_lock:
+            _live_schedulers.add(self)
         self._depth_gauge = obs.gauge("serve.queue_depth")
-        self._depth_gauge.set_fn(lambda: len(self._queue))
+        self._depth_gauge.set_fn(_total_queue_depth)
         self._ticks = obs.counter("serve.ticks")
         self._occupancy = obs.histogram("serve.batch_occupancy",
                                         buckets=_OCCUPANCY_BUCKETS)
@@ -290,15 +305,34 @@ class ServingScheduler:
         rows = np.stack([row for _, row in batch])
         try:
             with self.engine_lock:
-                self.engine.submit(rows)
-                results = self.engine.drain()
+                try:
+                    ids = self.engine.submit(rows)
+                    results = self.engine.drain()
+                except BaseException:
+                    # a failed tick must not leave its rows in the engine's
+                    # read queue: drain() can raise before popping anything
+                    # (e.g. "no model yet"), and the next tick would then
+                    # drain the stale rows first, misaligning every
+                    # subsequent result
+                    self.engine.discard_pending()
+                    raise
         except BaseException as e:
             self._worker_errors.inc()
             for ticket, _ in batch:
                 ticket._fail(e)
             return
-        for (ticket, _), res in zip(batch, results):
-            ticket._resolve(res)
+        by_id = {r.request_id: r for r in results}
+        if len(results) != len(batch) or any(rid not in by_id for rid in ids):
+            self._worker_errors.inc()
+            err = RuntimeError(
+                f"engine returned {len(results)} results for a "
+                f"{len(batch)}-row tick — its read queue was touched "
+                f"outside the scheduler's engine_lock")
+            for ticket, _ in batch:
+                ticket._fail(err)
+            return
+        for (ticket, _), rid in zip(batch, ids):
+            ticket._resolve(by_id[rid])
             _, completed_c, lat_h = self._tenant_metrics(ticket.tenant)
             completed_c.inc()
             lat_h.observe(ticket.latency_s)
@@ -324,6 +358,8 @@ class ServingScheduler:
         """Stop admitting, drain what was admitted, join the worker.
         Idempotent; afterwards ``submit`` resolves everything as a
         ``shutdown`` shed."""
+        with _live_lock:
+            _live_schedulers.discard(self)
         with self._cond:
             self._stop = True
             self._cond.notify_all()

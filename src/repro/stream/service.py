@@ -351,6 +351,15 @@ class ServingFrontEnd:
         obs.counter("score.requests", topology=self._topology).inc(len(ids))
         return ids
 
+    def discard_pending(self) -> int:
+        """Drop every submitted-but-undrained request; returns the count.
+        The serving scheduler calls this when a tick fails after
+        ``submit`` — rows left queued would be drained by the *next* tick
+        and misalign its results."""
+        n = len(self._queue)
+        self._queue.clear()
+        return n
+
     def drain(self, max_requests: Optional[int] = None) -> list[QueryResult]:
         """Serve queued requests in micro-batches against the current model."""
         self.poll_refresh()

@@ -222,8 +222,9 @@ def test_concurrent_scores_bit_identical_to_sequential():
 # ------------------------------------------------------------ worker errors
 def test_worker_error_reraised_on_caller_and_loop_survives():
     """Scoring before any model exists fails inside the worker tick; the
-    error must surface at ``result()`` on the caller's thread, and the
-    worker must stay alive to serve the next (valid) tick."""
+    error must surface at ``result()`` on the caller's thread, the failed
+    tick must leave no stale rows in the engine's read queue, and the
+    worker must stay alive to serve the next (valid) tick correctly."""
     svc = StreamService(ServiceConfig(
         dim=4, k=3, t=20, leaf_size=512, refresh_every=10**6,
         micro_batch=64, seed=0))
@@ -233,19 +234,48 @@ def test_worker_error_reraised_on_caller_and_loop_survives():
     with pytest.raises(RuntimeError):
         bad[0].result(timeout=30.0)
     assert all(t.done() for t in bad)      # the whole tick failed together
-    # heal the engine; the same scheduler/worker must now serve fine
+    assert len(svc._queue) == 0            # ...and left no stale rows behind
+    # heal the engine; the same scheduler/worker must now serve fine —
+    # with *different* rows than the failed tick, so leftover stale rows
+    # would surface as wrong scores rather than coincidentally-equal ones
     svc.ingest(_cluster_data(seed=0))
     svc.refresh()
-    good = sched.submit(x)
+    y = _cluster_data(n=8, seed=9)
+    good = sched.submit(y)
     results = [t.result(timeout=30.0) for t in good]
     assert all(isinstance(r, QueryResult) for r in results)
     sched.close()
+    # post-close direct scoring of the same rows is the reference
+    for a, b in zip(svc.score(y), results):
+        assert (a.center, a.distance, a.outlier_score) \
+            == (b.center, b.distance, b.outlier_score)
 
     # validation errors raise at submit() on the caller, pre-admission
     svc2 = _fitted_service()
     with ServingScheduler(svc2) as s2:
         with pytest.raises(ValueError):
             s2.submit(np.zeros((4, 9), np.float32))   # wrong dim
+
+
+def test_queue_depth_gauge_sums_live_schedulers_only():
+    """serve.queue_depth is one process-global series, but schedulers come
+    and go with Sessions: the gauge must read the sum over *live*
+    schedulers, not whichever instance registered its callback last, and a
+    closed scheduler must leave the sum."""
+    from repro import obs
+
+    svc = _fitted_service()
+    s1 = ServingScheduler(svc, ServingSpec(queue_bound=50), autostart=False)
+    s2 = ServingScheduler(svc, ServingSpec(queue_bound=50), autostart=False)
+    x = _cluster_data(n=10, seed=11)
+    s1.submit(x[:4])
+    s2.submit(x[4:])
+    g = obs.gauge("serve.queue_depth")
+    assert g.get() == 10                 # both live schedulers counted
+    s2.close()
+    assert g.get() == 4                  # s2 gone; s1's depth still reported
+    s1.close()
+    assert g.get() == 0
 
 
 # ------------------------------------------------------------ session facade
@@ -288,6 +318,32 @@ def test_session_score_stream_matches_score_and_emits_metrics():
     assert session.serving is None
     assert len(session.score(x[:4])) == 4
     session.close()                                  # idempotent
+
+
+def test_session_serve_attach_is_thread_safe():
+    """Concurrent first ``serve()`` calls must attach exactly one
+    scheduler — two would race their worker ticks on the shared engine."""
+    cfg = pipeline_config(
+        dim=4, k=3, t=30, topology="stream", leaf_size=512,
+        refresh_every=10**6, micro_batch=64, seed=0)
+    with Session(cfg) as session:
+        session.fit(_cluster_data(seed=0))
+        n = 8
+        barrier = threading.Barrier(n)
+        got = [None] * n
+
+        def attach(i):
+            barrier.wait()
+            got[i] = session.serve()
+
+        threads = [threading.Thread(target=attach, args=(i,))
+                   for i in range(n)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert all(s is got[0] for s in got)
+        assert session.serving is got[0]
 
 
 # ------------------------------------------------------------ fairness (slow)
