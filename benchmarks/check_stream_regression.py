@@ -17,7 +17,7 @@ a PR cannot silently trade away streaming model quality:
                                   is sublinear in n;
   * ``kernels_min_pts_per_s``   — floor on every measured backend of the
                                   ``"kernels"`` section (min_argmin /
-                                  lloyd_step through the dispatch
+                                  lloyd_step / score through the dispatch
                                   registry).  Set ~100x below healthy CPU
                                   throughput: it catches catastrophic
                                   dispatch regressions (e.g. auto
@@ -25,6 +25,15 @@ a PR cannot silently trade away streaming model quality:
                                   mode), not machine-speed noise.  The
                                   section itself is required — a bench run
                                   without it fails the gate;
+  * ``kernels_fused_min_speedup`` — floor on the fused one-pass score
+                                  kernel's speedup over the composed
+                                  min_argmin + jitted-divide path it
+                                  replaced (``kernels.fused.speedup``):
+                                  fusing must never cost throughput;
+  * ``quant_max_score_err``     — ceiling on the int8 quantized-center
+                                  backend's measured max |Δscore| vs the
+                                  fp32 path at a decision-boundary
+                                  threshold (``kernels.quant``);
   * ``obs_overhead_frac_max``   — ceiling on the telemetry plane's ingest
                                   slowdown (``"obs"`` section of the bench:
                                   metrics-on vs metrics-off throughput) —
@@ -104,6 +113,27 @@ def check(bench: dict, thr: dict) -> list[str]:
             if measured == 0:
                 print(f"FAIL kernels.{op}: no backend measured")
                 failures.append(f"kernels.{op}")
+        if "kernels_fused_min_speedup" in thr:
+            fu = kb.get("fused")
+            if fu is None:
+                print("FAIL kernels.fused: subsection missing from bench "
+                      "output (fused-vs-composed unmeasured)")
+                failures.append("kernels.fused")
+            else:
+                v, b = float(fu["speedup"]), thr["kernels_fused_min_speedup"]
+                tag = "ok  " if v >= b else "FAIL"
+                print(f"{tag} kernels.fused.speedup: {v:.3f} (min {b})")
+                if v < b:
+                    failures.append("kernels.fused.speedup")
+        if "quant_max_score_err" in thr:
+            qu = kb.get("quant")
+            if qu is None:
+                print("FAIL kernels.quant: subsection missing from bench "
+                      "output (int8 score error unmeasured)")
+                failures.append("kernels.quant")
+            else:
+                gate("kernels.quant.max_score_err",
+                     float(qu["max_score_err"]), thr["quant_max_score_err"])
     ob = bench.get("obs")
     if "obs_overhead_frac_max" in thr:
         if ob is None:

@@ -24,15 +24,18 @@ def _kernel_work(op: str, n: int, m: int, d: int) -> tuple[float, float]:
 
     min_argmin: the l2 path is one (n,d)@(d,m) matmul plus the row
     reductions; lloyd_step adds the one-hot accumulate matmul (same FLOP
-    count as the distance matmul).  Bytes model the streaming working set
-    (read x and c, write the (n,)-shaped outputs), not the distance matrix
-    — the whole point of the blocked/Pallas paths is that it never
-    materializes in HBM.
+    count as the distance matmul); score is min_argmin plus the threshold
+    divide (n more flops) and a third (n,)-shaped output.  Bytes model the
+    streaming working set (read x and c, write the (n,)-shaped outputs),
+    not the distance matrix — the whole point of the blocked/Pallas paths
+    is that it never materializes in HBM.
     """
     dist_flops = 2.0 * n * m * d + 4.0 * n * m
     io_bytes = 4.0 * (n * d + m * d + 2 * n)
     if op == "lloyd_step":
         return dist_flops + 2.0 * n * m * d, io_bytes + 4.0 * (m * d + m)
+    if op == "score":
+        return dist_flops + float(n), io_bytes + 4.0 * n
     return dist_flops, io_bytes
 
 
@@ -59,7 +62,7 @@ def annotate_kernels(bench_path: Path = _BENCH_STREAM) -> dict:
 
 
 def print_kernels(kb: dict) -> None:
-    hdr = (f"{'op/backend':28s} {'block_n':>8s} {'us':>10s} "
+    hdr = (f"{'op/backend':28s} {'tile':>12s} {'us':>10s} "
            f"{'GFLOP/s':>9s} {'GB/s':>8s} {'AI':>6s}")
     print(f"kernels @ n={kb['n']} m={kb['m']} d={kb['d']} "
           f"({kb['metric']}, {kb['platform']})")
@@ -70,9 +73,20 @@ def print_kernels(kb: dict) -> None:
             if "us_per_call" not in e:
                 print(f"{op + '/' + name:28s} {'— ' + e['skipped']}")
                 continue
-            print(f"{op + '/' + name:28s} {e['block_n']:8d} "
+            tile = (f"{e['block_n']}x{e['block_m']}" if "block_m" in e
+                    else f"{e['block_n']}")
+            print(f"{op + '/' + name:28s} {tile:>12s} "
                   f"{e['us_per_call']:10.1f} {e['achieved_gflops']:9.2f} "
                   f"{e['achieved_gb_s']:8.3f} {e['ai_flops_per_byte']:6.2f}")
+    fu, qu = kb.get("fused"), kb.get("quant")
+    if fu:
+        print(f"{'score fused-vs-composed':28s} "
+              f"{fu['fused_us']:.1f} us vs {fu['composed_us']:.1f} us "
+              f"(speedup {fu['speedup']:.2f}x)")
+    if qu:
+        print(f"{'score int8 error':28s} max {qu['max_score_err']:.4f} "
+              f"mean {qu['mean_score_err']:.5f} "
+              f"flips {100 * qu['argmin_flip_frac']:.2f}%")
 
 
 def load(art_dir="artifacts/dryrun", mesh="single"):

@@ -18,11 +18,22 @@ communication in records and bytes (the packed tree roots — the paper's
 one round), query latency and the sharded-vs-oneshot cost ratio.
 
 The result always carries a ``"kernels"`` section: per-backend
-``min_argmin`` / ``lloyd_step`` micro-benchmarks (through the
-``repro.kernels.dispatch`` registry, with the autotuner's chosen
-``block_n``), so the bench-smoke CI job can gate kernel-level regressions
-alongside the service-level ones.  ``benchmarks/roofline.py --kernels``
-annotates the same section with arithmetic-intensity/roofline terms.
+``min_argmin`` / ``lloyd_step`` / ``score`` micro-benchmarks (through the
+``repro.kernels.dispatch`` registry, with the autotuner's chosen tile —
+``block_n``, plus the jointly-tuned ``block_m`` for the 2-D fused score
+op), so the bench-smoke CI job can gate kernel-level regressions
+alongside the service-level ones.  Two derived subsections are gated by
+``check_stream_regression.py``:
+
+  * ``kernels.fused`` — the fused one-pass score kernel vs the composed
+    two-dispatch path it replaced (min_argmin + separate jitted divide);
+    ``speedup`` must stay >= ``kernels_fused_min_speedup``,
+  * ``kernels.quant`` — the int8 quantized-center backend's error,
+    MEASURED against the fp32 path (max |Δscore|, argmin flip fraction);
+    ``max_score_err`` must stay <= ``quant_max_score_err``.
+
+``benchmarks/roofline.py --kernels`` annotates the same section with
+arithmetic-intensity/roofline terms.
 
 With ``--serving smoke|full`` the result additionally gains the
 ``"serving"`` section — the async scheduler's goodput-vs-offered-load
@@ -146,20 +157,84 @@ def run_sharded(x, oneshot_cost: float, *, sites: int, k: int, t: int,
     }
 
 
+def _fused_vs_composed(*, n: int, m: int, d: int, metric: str) -> dict:
+    """Fused one-pass score vs the composed path it replaced.
+
+    Composed = yesterday's serving read path as separate dispatches: the
+    min_argmin kernel, then a second jitted divide over its output (the
+    (n,) intermediate crossing the dispatch boundary).  Fused = one
+    ``score`` kernel.  Gated: ``speedup >= kernels_fused_min_speedup``.
+    """
+    from repro.kernels.pdist.ops import min_argmin_blocked
+    from repro.kernels.score.ops import score_blocked
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    thr = jnp.float32(1.0)
+    div = jax.jit(lambda dist, t: dist / jnp.maximum(t, 1e-30))
+
+    def composed():
+        dist, amin = min_argmin_blocked(x, c, metric=metric)
+        return dist, amin, div(dist, thr)
+
+    def fused():
+        return score_blocked(x, c, thr, metric=metric)
+
+    t_c = dispatch._time_call(composed, repeats=5)
+    t_f = dispatch._time_call(fused, repeats=5)
+    return {
+        "backend": "blocked",
+        "composed_us": round(t_c * 1e6, 2),
+        "fused_us": round(t_f * 1e6, 2),
+        "speedup": round(t_c / t_f, 3),
+    }
+
+
+def _quant_error(*, n: int, m: int, d: int, metric: str) -> dict:
+    """Int8 quantized-center score error, measured — not assumed.
+
+    Threshold is set to the median fp32 distance so scores sit around 1
+    (the outlier decision boundary) — max |Δscore| is then directly the
+    worst-case decision-margin perturbation.  Gated:
+    ``max_score_err <= quant_max_score_err``.
+    """
+    from repro.kernels.score.ops import score_blocked, score_int8
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    dist, _, _ = score_blocked(x, c, jnp.float32(1.0), metric=metric)
+    thr = jnp.maximum(jnp.median(dist), 1e-12).astype(jnp.float32)
+    _, a_ref, s_ref = score_blocked(x, c, thr, metric=metric)
+    _, a_q, s_q = score_int8(x, c, thr, metric=metric)
+    err = np.abs(np.asarray(s_q) - np.asarray(s_ref))
+    return {
+        "threshold": float(thr),
+        "max_score_err": round(float(err.max()), 5),
+        "mean_score_err": round(float(err.mean()), 6),
+        "argmin_flip_frac": round(
+            float(np.mean(np.asarray(a_q) != np.asarray(a_ref))), 5),
+    }
+
+
 def kernel_bench(*, n: int = 32768, m: int = 64, d: int = 8,
                  metric: str = "l2sq") -> dict:
-    """Per-backend min_argmin/lloyd_step micro-bench through the registry.
+    """Per-backend micro-bench of every registered op, via the registry.
 
     Shapes mirror the stream hot path (one leaf/root worth of rows against
     a round's samples).  Each supported backend reports the autotuner's
-    chosen ``block_n`` and its throughput; backends that would not serve
-    this platform in production (Pallas interpret mode off-TPU) are
-    recorded as skipped rather than timed.
+    chosen ``block_n`` (and, for the 2-D fused ``score`` op, the
+    jointly-tuned ``block_m``) and its throughput; backends that would not
+    serve this platform in production (Pallas interpret mode off-TPU) are
+    recorded as skipped rather than timed.  The ``fused`` and ``quant``
+    subsections carry the regression-gated fused-vs-composed speedup and
+    the int8 backend's measured score error.
     """
     platform = jax.default_backend()
     out = {"platform": platform, "n": n, "m": m, "d": d, "metric": metric,
            "ops": {}}
-    for op in ("min_argmin", "lloyd_step"):
+    for op in ("min_argmin", "lloyd_step", "score"):
         out["ops"][op] = {}
         for name, reg in sorted(dispatch.registered_backends(op).items()):
             if not reg.supports(metric, platform, np.float32, n, m, d):
@@ -168,16 +243,25 @@ def kernel_bench(*, n: int = 32768, m: int = 64, d: int = 8,
             if name == "pallas" and platform != "tpu":
                 out["ops"][op][name] = {"skipped": "interpret-only off TPU"}
                 continue
-            bn = dispatch.autotune_block_n(op, name, metric=metric,
-                                           n=n, m=m, d=d)
-            t_s = dispatch.measure_block_ns(op, name, metric=metric,
-                                            n=n, m=m, d=d,
-                                            candidates=[bn])[bn]
-            out["ops"][op][name] = {
-                "block_n": int(bn),
-                "us_per_call": round(t_s * 1e6, 2),
-                "pts_per_s": round(n / t_s, 1),
-            }
+            if reg.default_block_m is not None:
+                bn, bm = dispatch.autotune_tiles(op, name, metric=metric,
+                                                 n=n, m=m, d=d)
+                t_s = dispatch.measure_tiles(op, name, metric=metric,
+                                             n=n, m=m, d=d,
+                                             candidates=[(bn, bm)])[(bn, bm)]
+                entry = {"block_n": int(bn), "block_m": int(bm)}
+            else:
+                bn = dispatch.autotune_block_n(op, name, metric=metric,
+                                               n=n, m=m, d=d)
+                t_s = dispatch.measure_block_ns(op, name, metric=metric,
+                                                n=n, m=m, d=d,
+                                                candidates=[bn])[bn]
+                entry = {"block_n": int(bn)}
+            entry["us_per_call"] = round(t_s * 1e6, 2)
+            entry["pts_per_s"] = round(n / t_s, 1)
+            out["ops"][op][name] = entry
+    out["fused"] = _fused_vs_composed(n=n, m=m, d=d, metric=metric)
+    out["quant"] = _quant_error(n=n, m=m, d=d, metric=metric)
     return out
 
 
@@ -333,9 +417,17 @@ def main() -> None:
     for op, backends in kb["ops"].items():
         live = {b: e for b, e in backends.items() if "pts_per_s" in e}
         print(f"kernels[{op}] @ (n={kb['n']}, m={kb['m']}, d={kb['d']}): " +
-              "  ".join(f"{b}: {e['pts_per_s']:,.0f} pts/s "
-                        f"(block_n={e['block_n']})"
-                        for b, e in live.items()))
+              "  ".join(
+                  f"{b}: {e['pts_per_s']:,.0f} pts/s (block_n={e['block_n']}"
+                  + (f", block_m={e['block_m']}" if "block_m" in e else "")
+                  + ")"
+                  for b, e in live.items()))
+    fu, qu = kb["fused"], kb["quant"]
+    print(f"fused  : {fu['fused_us']:.0f} us vs composed "
+          f"{fu['composed_us']:.0f} us  (speedup {fu['speedup']:.2f}x)")
+    print(f"quant  : max score err {qu['max_score_err']:.4f}  "
+          f"mean {qu['mean_score_err']:.5f}  "
+          f"argmin flips {100 * qu['argmin_flip_frac']:.2f}%")
     ob = res["obs"]
     print(f"obs    : metrics-on {ob['ingest_pts_per_s_metrics_on']:,.0f} "
           f"pts/s vs off {ob['ingest_pts_per_s_metrics_off']:,.0f} pts/s "

@@ -82,10 +82,17 @@ def stream_point(bench: dict) -> dict:
 
 def kernels_point(bench: dict) -> dict:
     pt = {}
-    for op, backends in bench.get("kernels", {}).get("ops", {}).items():
+    kb = bench.get("kernels", {})
+    for op, backends in kb.get("ops", {}).items():
         for name, e in backends.items():
             if "pts_per_s" in e:
                 pt[f"{op}.{name}"] = float(e["pts_per_s"])
+    fu = kb.get("fused")
+    if fu:
+        pt["score.fused_speedup"] = round(float(fu["speedup"]), 3)
+    qu = kb.get("quant")
+    if qu:
+        pt["score.quant_max_err"] = round(float(qu["max_score_err"]), 5)
     return pt
 
 

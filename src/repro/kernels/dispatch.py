@@ -37,7 +37,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import json
+import logging
 import os
 import time
 from pathlib import Path
@@ -48,9 +50,14 @@ import numpy as np
 
 from repro import obs
 
-BACKENDS = ("auto", "pallas", "blocked", "ref")
+_log = logging.getLogger("repro.kernels.dispatch")
 
-OPS = ("min_argmin", "lloyd_step")
+# "int8" is the quantized-center score backend: it changes results (bounded
+# quantization error, measured in benchmarks/stream_bench.py), so it is
+# never auto-picked — callers must name it explicitly.
+BACKENDS = ("auto", "pallas", "blocked", "ref", "int8")
+
+OPS = ("min_argmin", "lloyd_step", "score")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +92,14 @@ class KernelPolicy:
 
 
 class Registration(NamedTuple):
-    """One backend implementation of one op."""
+    """One backend implementation of one op.
+
+    2-D ops (the fused ``score`` path) additionally register a center-tile
+    dimension: ``default_block_m`` (platform -> int) plus
+    ``tune_candidates_m``, and their ``impl`` accepts a ``block_m``
+    keyword.  1-D ops leave both at their defaults and resolve through
+    :func:`resolve` exactly as before.
+    """
 
     op: str
     name: str
@@ -95,6 +109,8 @@ class Registration(NamedTuple):
     default_block_n: Callable      # platform -> int
     tune_candidates: tuple         # candidate block_n values for the autotuner
     make_args: Callable            # (n, m, d, rng) -> positional args for impl
+    default_block_m: Optional[Callable] = None   # platform -> int (2-D ops)
+    tune_candidates_m: tuple = ()  # candidate block_m values (2-D ops)
 
 
 _REGISTRY: dict[str, dict[str, Registration]] = {}
@@ -110,6 +126,7 @@ def _ensure_registered() -> None:
     _registered = True
     from repro.kernels.lloyd import ops as _lloyd_ops   # noqa: F401
     from repro.kernels.pdist import ops as _pdist_ops   # noqa: F401
+    from repro.kernels.score import ops as _score_ops   # noqa: F401
 
 
 def register(
@@ -121,6 +138,8 @@ def register(
     default_block_n: Callable,
     tune_candidates: Sequence[int] = (),
     make_args: Callable = None,
+    default_block_m: Callable = None,
+    tune_candidates_m: Sequence[int] = (),
 ):
     """Decorator: register ``fn`` as the ``name`` backend of ``op``."""
     if op not in OPS:
@@ -131,7 +150,9 @@ def register(
             op=op, name=name, impl=fn, supports=supports, priority=priority,
             default_block_n=default_block_n,
             tune_candidates=tuple(tune_candidates),
-            make_args=make_args)
+            make_args=make_args,
+            default_block_m=default_block_m,
+            tune_candidates_m=tuple(tune_candidates_m))
         return fn
 
     return deco
@@ -258,8 +279,57 @@ def resolve(
     return reg, int(bn)
 
 
+def resolve_tiles(
+    op: str,
+    policy: Optional[KernelPolicy] = None,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    dtype=np.float32,
+    platform: Optional[str] = None,
+) -> tuple[Registration, int, int]:
+    """Registry lookup for a 2-D-tiled op: (registration, block_n, block_m).
+
+    Like :func:`resolve`, but also resolves the center-tile size for ops
+    registered with ``default_block_m``.  An explicit ``policy.block_n``
+    pins the row tile (and disables the joint tuner — exactly the 1-D
+    semantics); otherwise, under ``policy.autotune``, the (block_n,
+    block_m) pair is measured *jointly* per shape bucket and cached.
+    """
+    policy = policy if policy is not None else get_default_policy()
+    platform = platform or jax.default_backend()
+    reg = select_backend(op, policy, metric=metric, n=n, m=m, d=d,
+                         dtype=dtype, platform=platform)
+    obs.counter("kernels.dispatch", op=op, backend=reg.name).inc()
+    if reg.default_block_m is None:
+        # a 1-D backend serving a 2-D op entry point: column tile unused
+        bn = policy.block_n
+        if bn is None:
+            bn = (autotune_block_n(op, reg.name, metric=metric, n=n, m=m,
+                                   d=d, platform=platform)
+                  if policy.autotune and reg.tune_candidates
+                  else reg.default_block_n(platform))
+        return reg, int(bn), 0
+    bn, bm = policy.block_n, None
+    if bn is None and policy.autotune and reg.tune_candidates:
+        bn, bm = autotune_tiles(op, reg.name, metric=metric, n=n, m=m, d=d,
+                                platform=platform)
+    if bn is None:
+        bn = reg.default_block_n(platform)
+    if bm is None:
+        bm = reg.default_block_m(platform)
+    return reg, int(bn), int(bm)
+
+
 # ------------------------------------------------------------------ autotuner
-_TUNE_VERSION = 1
+# v2: 2-D ops cache the jointly-tuned (block_n, block_m) pair.  The bump
+# changes the key prefix, so pre-bump entries simply never match — and any
+# entry that *does* match a key but lacks the fields its reader needs
+# (e.g. a single-block_n record left under a 2-D op's key) is skipped with
+# a debug log and re-measured, never a KeyError.
+_TUNE_VERSION = 2
 # Shapes at/above this row bucket share one measurement (bounds tuner cost).
 _MAX_MEASURE_ROWS = 1 << 17
 _tune_cache: Optional[dict] = None
@@ -289,7 +359,33 @@ def _load_cache() -> dict:
             _tune_cache = json.loads(_cache_path().read_text())
         except (OSError, ValueError):
             _tune_cache = {}
+        stale = [k for k in _tune_cache
+                 if not k.startswith(f"v{_TUNE_VERSION}/")]
+        if stale:
+            _log.debug("autotune cache %s holds %d entr%s from older schema "
+                       "versions (e.g. %s); they are ignored, not migrated",
+                       _cache_path(), len(stale),
+                       "y" if len(stale) == 1 else "ies", stale[0])
     return _tune_cache
+
+
+def _cache_hit(key: str, required: Sequence[str]) -> Optional[dict]:
+    """Cached entry for ``key`` iff it carries every ``required`` field.
+
+    A matching key with missing fields (a stale single-``block_n`` record
+    under a 2-D op's key, or a hand-edited file) is skipped with a debug
+    log and re-measured — the schema bump must never surface as a
+    KeyError in a caller.
+    """
+    hit = _load_cache().get(key)
+    if not isinstance(hit, dict):
+        return None
+    missing = [f for f in required if f not in hit]
+    if missing:
+        _log.debug("stale autotune entry %s (missing %s); re-measuring",
+                   key, ", ".join(missing))
+        return None
+    return hit
 
 
 def _store_cache(key: str, entry: dict) -> None:
@@ -321,6 +417,18 @@ def _default_make_args(n: int, m: int, d: int, rng: np.random.Generator):
     return (x, c)
 
 
+def _time_call(fn, *, repeats: int) -> float:
+    out = fn()                       # compile + warm outside the clock
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def measure_block_ns(
     op: str,
     backend: str,
@@ -340,18 +448,31 @@ def measure_block_ns(
     rng = np.random.default_rng(0)
     make = reg.make_args or _default_make_args
     args = make(n, m, d, rng)
-    timings: dict[int, float] = {}
-    for bn in cands:
-        out = reg.impl(*args, metric=metric, block_n=bn)   # compile + warm
-        jax.block_until_ready(out)
-        best = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            out = reg.impl(*args, metric=metric, block_n=bn)
-            jax.block_until_ready(out)
-            best = min(best, time.perf_counter() - t0)
-        timings[bn] = best
-    return timings
+    return {bn: _time_call(
+        functools.partial(reg.impl, *args, metric=metric, block_n=bn),
+        repeats=repeats) for bn in cands}
+
+
+def measure_tiles(
+    op: str,
+    backend: str,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    candidates: Sequence[tuple[int, int]],
+    repeats: int = 3,
+) -> dict[tuple[int, int], float]:
+    """Time a 2-D op's impl at each candidate (block_n, block_m) pair."""
+    reg = registered_backends(op)[backend]
+    rng = np.random.default_rng(0)
+    make = reg.make_args or _default_make_args
+    args = make(n, m, d, rng)
+    return {(bn, bm): _time_call(
+        functools.partial(reg.impl, *args, metric=metric,
+                          block_n=bn, block_m=bm),
+        repeats=repeats) for bn, bm in candidates}
 
 
 def autotune_block_n(
@@ -378,9 +499,8 @@ def autotune_block_n(
     bm, bd = _bucket(m), _bucket(d)
     key = (f"v{_TUNE_VERSION}/{op}/{backend}/{platform}/{metric}/"
            f"n{bn_rows}/m{bm}/d{bd}")
-    cache = _load_cache()
-    hit = cache.get(key)
-    if isinstance(hit, dict) and "block_n" in hit:
+    hit = _cache_hit(key, ("block_n",))
+    if hit is not None:
         obs.counter("kernels.autotune_cache", result="hit").inc()
         return int(hit["block_n"])
     obs.counter("kernels.autotune_cache", result="miss").inc()
@@ -400,3 +520,64 @@ def autotune_block_n(
         "measured_shape": [bn_rows, bm, bd],
     })
     return int(best)
+
+
+def autotune_tiles(
+    op: str,
+    backend: str,
+    *,
+    metric: str,
+    n: int,
+    m: int,
+    d: int,
+    platform: Optional[str] = None,
+    repeats: int = 3,
+) -> tuple[int, int]:
+    """Best jointly-tuned (block_n, block_m) pair for a 2-D op.
+
+    The candidate grid is the cross product of the backend's registered
+    row-tile and center-tile candidates (each clipped to its shape bucket
+    — no point tiling wider than the data); tiles interact through cache
+    and VMEM residency, so the pair is measured together rather than each
+    dimension in isolation.  Shares the v2 cache keyspace with
+    :func:`autotune_block_n`; an entry lacking ``block_m`` (written by the
+    1-D tuner for the same bucket) is treated as stale and re-measured.
+    """
+    global _tuning
+    platform = platform or jax.default_backend()
+    reg = registered_backends(op)[backend]
+    if reg.default_block_m is None:
+        raise ValueError(f"op {op!r} backend {backend!r} registered no "
+                         f"block_m dimension; use autotune_block_n")
+    if not reg.tune_candidates or _tuning:
+        return (reg.default_block_n(platform), reg.default_block_m(platform))
+    bn_rows = min(_bucket(n), _MAX_MEASURE_ROWS)
+    bm_cols, bd = _bucket(m), _bucket(d)
+    key = (f"v{_TUNE_VERSION}/{op}/{backend}/{platform}/{metric}/"
+           f"n{bn_rows}/m{bm_cols}/d{bd}")
+    hit = _cache_hit(key, ("block_n", "block_m"))
+    if hit is not None:
+        obs.counter("kernels.autotune_cache", result="hit").inc()
+        return int(hit["block_n"]), int(hit["block_m"])
+    obs.counter("kernels.autotune_cache", result="miss").inc()
+    _tuning = True
+    try:
+        bns = sorted({min(c, bn_rows) for c in reg.tune_candidates})
+        bms = sorted({min(c, bm_cols) for c in (reg.tune_candidates_m
+                                                or (reg.default_block_m(
+                                                    platform),))})
+        pairs = [(bn, bm) for bn in bns for bm in bms]
+        timings = measure_tiles(op, backend, metric=metric, n=bn_rows,
+                                m=bm_cols, d=bd, candidates=pairs,
+                                repeats=repeats)
+    finally:
+        _tuning = False
+    best = min(timings, key=timings.get)
+    _store_cache(key, {
+        "block_n": int(best[0]),
+        "block_m": int(best[1]),
+        "timings_us": {f"{bn}x{bm}": round(t * 1e6, 2)
+                       for (bn, bm), t in timings.items()},
+        "measured_shape": [bn_rows, bm_cols, bd],
+    })
+    return int(best[0]), int(best[1])

@@ -1,0 +1,2 @@
+"""Fused serving score op: one-pass pdist + argmin + outlier score."""
+from repro.kernels.score.ops import score  # noqa: F401

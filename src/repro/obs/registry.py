@@ -21,7 +21,7 @@ that snapshot's home:
 * :meth:`MetricsRegistry.trace` — a ``with trace("refresh.fit"): ...``
   span recording wall time into the ``phase.refresh.fit`` histogram, the
   one idiom every pipeline phase (ingest -> leaf-flush -> merge-reduce;
-  refresh: gather -> fit -> install; score: enqueue -> batch -> pdist ->
+  refresh: gather -> fit -> install; score: enqueue -> batch -> fused ->
   drain) is instrumented with.
 
 Metrics are keyed by ``name{label=value,...}`` with sorted label keys, so

@@ -1,11 +1,12 @@
 """Async serving: continuous batching + admission control over one model.
 
-The paper's summary is tiny and scoring against it is one jitted pdist —
-cheap enough that a single shared model should serve many concurrent
-clients.  This package is the scheduler/worker split that makes that
-true in-process:
+The paper's summary is tiny and scoring against it is one fused score
+kernel (``repro.kernels.score``: pdist + argmin + threshold divide in a
+single dispatch) — cheap enough that a single shared model should serve
+many concurrent clients.  This package is the scheduler/worker split
+that makes that true in-process:
 
-    client threads --submit--> bounded queue --tick--> one jitted pdist
+    client threads --submit--> bounded queue --tick--> one fused score
          |                       |  admission control       per micro-batch
     score_stream()               |   queue_bound: shed|wait      |
      (Session)                   |   per-tenant quotas           v

@@ -4,8 +4,10 @@ The scheduler/worker split in front of ``ServingFrontEnd``: many client
 threads ``submit()`` score requests concurrently; a single worker thread
 pops them in ticks — lingering up to ``batch_window_ms`` so requests from
 *different* clients coalesce — and scores each tick through the engine's
-existing micro-batched read path (one jitted pdist call per micro-batch,
-padded to a static shape, so the hot path never retraces).  Because the
+existing micro-batched read path (ONE fused score-kernel dispatch per
+micro-batch — pdist + argmin + threshold divide in a single pass via
+``repro.kernels.score`` — padded to a static shape, so the hot path never
+retraces).  Because the
 scoring kernel computes every row independently and every micro-batch is
 padded to the same static shape, a row's result is bit-identical no
 matter which requests it shared a tick with — the concurrent path returns

@@ -19,7 +19,8 @@ The knobs, and why each exists:
   caller: no request is lost, offered load self-limits).
 * ``batch_window_ms`` — how long a scheduler tick lingers to let more
   requests join the batch.  Larger windows raise batch occupancy (fewer,
-  fuller jitted pdist calls) at the cost of added latency at low load.
+  fuller fused score-kernel calls) at the cost of added latency at low
+  load.
 * ``tenant_quota`` — per-tenant cap on *queued* requests; one noisy
   tenant can fill at most its quota of the shared queue, so other tenants
   keep getting admitted (fairness under multi-tenant overload).

@@ -5,7 +5,7 @@ dataset.  This package turns it into a continuously serving system:
 
     raw stream --> leaf buffer --> weighted summaries --> buffer tree
                                                              |
-                 queries <-- jitted pdist scoring <-- weighted k-means--
+                 queries <-- fused score kernel <-- weighted k-means--
 
 Why merge-and-reduce is correct here
 ------------------------------------

@@ -6,11 +6,14 @@ the union of all live weighted summaries — is re-clustered with weighted
 k-means-- (the paper's coordinator step) into a versioned ``ModelState``.
 
 Read path: ``submit`` enqueues assign/score requests; ``drain`` serves the
-queue in fixed-size micro-batches through one jitted scoring kernel
-(fused min-distance + argmin via ``repro.kernels.pdist``; backend/tile
-selection via ``ServiceConfig.policy``).  Padding every micro-batch to the same static
-shape means exactly one compile per (batch, model) shape — the hot path
-never retraces.  Per-request latency (enqueue -> scored) is recorded for
+queue in fixed-size micro-batches through ONE fused kernel dispatch
+(``repro.kernels.score``: min-distance → argmin → dist/threshold in a
+single pass; backend/tile selection via ``ServiceConfig.policy``).  The
+queue holds whole submitted *blocks*, not per-row tuples, so enqueue and
+batch assembly are O(blocks) array copies instead of O(rows) Python
+iterations.  Padding every micro-batch to the same static shape means
+exactly one compile per (batch, model) shape — the hot path never
+retraces.  Per-request latency (enqueue -> scored) is recorded for
 p50/p99 reporting.
 
 Double-buffered refresh (``async_refresh=True``): a cadence refresh
@@ -52,7 +55,7 @@ from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
-from repro.kernels.pdist.ops import min_argmin
+from repro.kernels.score.ops import score as fused_score
 from repro.stream.tree import StreamTree, TreeConfig
 from repro.summarize.base import SummarizerPolicy, get_default_summarizer
 
@@ -131,9 +134,11 @@ class QueryResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("metric", "policy"))
 def _score_batch(x, centers, threshold, *, metric, policy):
-    dist, amin = min_argmin(x, centers, metric=metric, policy=policy)
-    score = dist / jnp.maximum(threshold, 1e-30)
-    return dist, amin, score
+    # one registry dispatch for the whole read path (pdist + argmin +
+    # threshold divide); for the non-quantized backends the fused op is
+    # bit-identical to the composed min_argmin + divide it replaced
+    # (tests/test_serving.py::test_fused_score_bit_identical_to_composed)
+    return fused_score(x, centers, threshold, metric=metric, policy=policy)
 
 
 def fit_model(pts, wts, valid, key, version, *, k, t, iters, metric,
@@ -183,7 +188,10 @@ class ServingFrontEnd:
     def __init__(self, cfg):
         self.cfg = cfg
         self.model: Optional[ModelState] = None
-        self._queue: deque = deque()   # (id, row (d,), t_enqueue)
+        # block-granular: (first_id, rows (b, d) f32, t_enqueue) per submit
+        # call — request ids are consecutive within a block
+        self._queue: deque = deque()
+        self._queued_rows = 0
         self._next_id = 0
         self._lat = obs.histogram("serve.latency", topology=self._topology)
         self._worker: Optional[threading.Thread] = None
@@ -342,12 +350,12 @@ class ServingFrontEnd:
         # already dequeued
         x, _ = self._validate_points(points, None)
         now = time.perf_counter()
-        ids = []
         with obs.trace("score.enqueue", topology=self._topology):
-            for row in x:
-                ids.append(self._next_id)
-                self._queue.append((self._next_id, row, now))
-                self._next_id += 1
+            n = x.shape[0]
+            ids = list(range(self._next_id, self._next_id + n))
+            self._queue.append((self._next_id, x, now))
+            self._queued_rows += n
+            self._next_id += n
         obs.counter("score.requests", topology=self._topology).inc(len(ids))
         return ids
 
@@ -356,8 +364,9 @@ class ServingFrontEnd:
         The serving scheduler calls this when a tick fails after
         ``submit`` — rows left queued would be drained by the *next* tick
         and misalign its results."""
-        n = len(self._queue)
+        n = self._queued_rows
         self._queue.clear()
+        self._queued_rows = 0
         return n
 
     def drain(self, max_requests: Optional[int] = None) -> list[QueryResult]:
@@ -369,16 +378,28 @@ class ServingFrontEnd:
             raise RuntimeError("no model yet — call refresh() first")
         cfg = self.cfg
         out: list[QueryResult] = []
-        budget = len(self._queue) if max_requests is None else max_requests
+        budget = self._queued_rows if max_requests is None else max_requests
         with obs.trace("score.drain", topology=self._topology):
             while self._queue and budget > 0:
                 with obs.trace("score.batch", topology=self._topology):
-                    take = min(cfg.micro_batch, len(self._queue), budget)
-                    batch = [self._queue.popleft() for _ in range(take)]
-                    budget -= take
+                    take = min(cfg.micro_batch, self._queued_rows, budget)
                     xb = np.zeros((cfg.micro_batch, cfg.dim), np.float32)
-                    xb[:take] = np.stack([b[1] for b in batch])
-                with obs.trace("score.pdist", topology=self._topology):
+                    # slice whole blocks into the pad buffer; a block that
+                    # overhangs the batch is split, its tail re-queued
+                    runs, filled = [], 0
+                    while filled < take:
+                        rid0, rows, t0 = self._queue[0]
+                        r = min(rows.shape[0], take - filled)
+                        xb[filled:filled + r] = rows[:r]
+                        runs.append((rid0, r, t0))
+                        if r == rows.shape[0]:
+                            self._queue.popleft()
+                        else:
+                            self._queue[0] = (rid0 + r, rows[r:], t0)
+                        filled += r
+                    self._queued_rows -= take
+                    budget -= take
+                with obs.trace("score.fused", topology=self._topology):
                     dist, amin, score = _score_batch(
                         jnp.asarray(xb), self.model.centers,
                         self.model.threshold,
@@ -387,14 +408,17 @@ class ServingFrontEnd:
                 done = time.perf_counter()
                 dist, amin, score = (np.asarray(a)
                                      for a in (dist, amin, score))
-                for i, (rid, _, t0) in enumerate(batch):
+                i = 0
+                for rid0, r, t0 in runs:
                     lat = done - t0
-                    self._lat.observe(lat)
-                    out.append(QueryResult(
-                        request_id=rid, center=int(amin[i]),
-                        distance=float(dist[i]),
-                        outlier_score=float(score[i]),
-                        is_outlier=bool(score[i] > 1.0), latency_s=lat))
+                    for j in range(i, i + r):
+                        self._lat.observe(lat)
+                        out.append(QueryResult(
+                            request_id=rid0 + (j - i), center=int(amin[j]),
+                            distance=float(dist[j]),
+                            outlier_score=float(score[j]),
+                            is_outlier=bool(score[j] > 1.0), latency_s=lat))
+                    i += r
         return out
 
     def score(self, points) -> list[QueryResult]:

@@ -70,12 +70,27 @@ def record_cap(cfg: TreeConfig) -> int:
 
     Delegates to the selected summarizer's registered ``record_bound`` —
     for the paper summarizer: centers <= rounds * m where rounds depends
-    only on the mass (<= cfg.max_points) and candidates carry >= 1 mass
-    each in tree use (raw points enter with unit weight), so <= 8t.
+    only on the mass (<= the mass bound below) and candidates carry >= 1
+    mass each in tree use (raw points enter with unit weight), so <= 8t.
+
+    With a sliding window the mass bound tightens: no summary can carry
+    more mass than the live stream, which eviction keeps under
+    ``window + merge-span + flush slack`` (unit weights).  The force-merge
+    loop in ``_compact`` ignores the span cap, so the tightening only
+    applies when the checkpoint slot budget provably keeps force-merge
+    from firing (every node carries >= leaf_size mass, so the node count
+    never exceeds live_mass // leaf_size).  Non-windowed configs keep the
+    ``cfg.max_points`` stream-length bound unchanged.
     """
+    max_points = cfg.max_points
+    if cfg.window is not None:
+        span = max(cfg.leaf_size, cfg.window // 4)
+        live = cfg.window + span + 2 * cfg.leaf_size
+        if live // cfg.leaf_size + 1 <= cfg.max_summaries:
+            max_points = min(max_points, live)
     return record_bound(cfg.summarizer, metric=cfg.metric, k=cfg.k, t=cfg.t,
                         alpha=cfg.alpha, beta=cfg.beta,
-                        max_points=cfg.max_points, leaf_size=cfg.leaf_size)
+                        max_points=max_points, leaf_size=cfg.leaf_size)
 
 
 @dataclasses.dataclass

@@ -31,6 +31,7 @@ from repro.kernels.lloyd.ops import lloyd_step
 from repro.kernels.lloyd.ref import lloyd_step_ref
 from repro.kernels.pdist.ops import min_argmin
 from repro.kernels.pdist.ref import min_argmin_ref
+from repro.kernels.score.ops import score, score_blocked, score_int8
 
 METRICS = ["l2sq", "l2", "l1"]
 # ragged on purpose: nothing divides the tile sizes; the 200-center cases
@@ -139,7 +140,7 @@ def test_lloyd_pallas_interpret_close_to_ref(metric):
 # ------------------------------------------------------------ registry rules
 def test_auto_selects_blocked_off_tpu():
     assert jax.default_backend() != "tpu", "test assumes a CPU/GPU host"
-    for op in ("min_argmin", "lloyd_step"):
+    for op in ("min_argmin", "lloyd_step", "score"):
         reg = dispatch.select_backend(op, KernelPolicy(), metric="l2sq",
                                       n=100, m=10, d=4)
         assert reg.name == "blocked"
@@ -278,6 +279,184 @@ def test_autotune_policy_resolves_block_n(tmp_path, monkeypatch):
         dispatch.clear_autotune_cache()
 
 
+# ------------------------------------------------------------ fused score op
+_THR = 0.7  # scores land on both sides of the outlier boundary
+
+
+def _score_ref(x, c, metric):
+    """Oracle through the registry's ref backend (the composed path)."""
+    return score(x, c, jnp.float32(_THR), metric=metric,
+                 policy=KernelPolicy(backend="ref"))
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("metric", METRICS + ["cosine"])
+def test_score_blocked_parity_vs_ref(shape, metric):
+    n, m, d = shape
+    x, c, _ = _data(n, m, d)
+    dr, ar, sr = _score_ref(x, c, metric)
+    # chunked rows (block_n=64) through the registry, default center tile
+    db, ab, sb = score(x, c, jnp.float32(_THR), metric=metric,
+                       policy=KernelPolicy(backend="blocked", block_n=64))
+    assert (np.asarray(ab) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(db), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(sr),
+                               rtol=1e-5, atol=1e-5)
+    # tiny center tile (block_m=32): the running-min scan over center
+    # tiles, incl. the masked ragged last tile — bit-equal argmins still
+    dt, at, st = score_blocked(x, c, jnp.float32(_THR), metric=metric,
+                               block_n=64, block_m=32)
+    assert (np.asarray(at) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(dt), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_score_pallas_interpret_parity_vs_ref(shape, metric):
+    n, m, d = shape
+    x, c, _ = _data(n, m, d)
+    dr, ar, sr = _score_ref(x, c, metric)
+    dp, ap_, sp = score(x, c, jnp.float32(_THR), metric=metric,
+                        policy=KernelPolicy(backend="pallas"))
+    assert (np.asarray(ap_) == np.asarray(ar)).all()
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_score_small_m_blocked_is_bit_identical_to_ref():
+    # the serving shape (m = k ~ tens <= block_m): the center-tile loop
+    # collapses to the ref computation, so fusing must not change a bit
+    x, c, _ = _data(257, 20, 11)
+    dr, ar, sr = _score_ref(x, c, "l2sq")
+    db, ab, sb = score(x, c, jnp.float32(_THR), metric="l2sq",
+                       policy=KernelPolicy(backend="blocked"))
+    assert (np.asarray(db) == np.asarray(dr)).all()
+    assert (np.asarray(ab) == np.asarray(ar)).all()
+    assert (np.asarray(sb) == np.asarray(sr)).all()
+
+
+def test_score_predicates_cosine_excluded_from_pallas_only():
+    regs = dispatch.registered_backends("score")
+    assert set(regs) == {"ref", "blocked", "pallas", "int8"}
+    for name in ("ref", "blocked", "int8"):
+        assert regs[name].supports("cosine", "cpu", np.float32, 100, 10, 4)
+    assert not regs["pallas"].supports("cosine", "tpu", np.float32, 100, 10, 4)
+    # explicit-but-unsupported falls back to auto, like pdist does
+    reg = dispatch.select_backend("score", KernelPolicy(backend="pallas"),
+                                  metric="cosine", n=100, m=10, d=4,
+                                  platform="tpu")
+    assert reg.name == "blocked"
+
+
+def test_score_int8_never_auto_picked():
+    # int8 changes results, so auto must not select it on any platform
+    for platform in ("cpu", "tpu"):
+        reg = dispatch.select_backend("score", KernelPolicy(), metric="l2sq",
+                                      n=100, m=10, d=4, platform=platform)
+        assert reg.name != "int8"
+    reg = dispatch.select_backend("score", KernelPolicy(backend="int8"),
+                                  metric="l2sq", n=100, m=10, d=4)
+    assert reg.name == "int8"
+
+
+@pytest.mark.parametrize("metric", METRICS + ["cosine"])
+def test_score_int8_error_within_gated_ceiling(metric):
+    """The int8 path's error must stay under the SAME ceiling the bench
+    gate enforces (benchmarks/stream_thresholds.json) — the bound is
+    measured there, asserted here."""
+    from pathlib import Path
+    thr_file = (Path(__file__).resolve().parent.parent / "benchmarks"
+                / "stream_thresholds.json")
+    ceiling = json.loads(thr_file.read_text())["quant_max_score_err"]
+    x, c, _ = _data(1001, 64, 8)
+    dr, ar, _ = _score_ref(x, c, metric)
+    # decision-boundary threshold, like the bench: scores sit around 1
+    thr = jnp.maximum(jnp.median(dr), 1e-12).astype(jnp.float32)
+    _, _, sr = score(x, c, thr, metric=metric,
+                     policy=KernelPolicy(backend="ref"))
+    _, _, sq = score(x, c, thr, metric=metric,
+                     policy=KernelPolicy(backend="int8"))
+    err = float(np.max(np.abs(np.asarray(sq) - np.asarray(sr))))
+    assert err <= ceiling, (metric, err)
+
+
+def test_score_joint_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS_CACHE", str(tmp_path))
+    dispatch.clear_autotune_cache()
+    try:
+        bn, bm = dispatch.autotune_tiles("score", "blocked", metric="l2sq",
+                                         n=2048, m=256, d=8)
+        cache_file = tmp_path / "autotune.json"
+        payload = json.loads(cache_file.read_text())
+        (key,) = payload.keys()
+        assert key.startswith("v2/score/blocked/")
+        assert payload[key]["block_n"] == bn
+        assert payload[key]["block_m"] == bm
+        assert payload[key]["timings_us"]
+        # second call (same bucket): served from cache — poisoning the
+        # cached pair must be reflected verbatim
+        payload[key]["block_n"], payload[key]["block_m"] = 12345, 678
+        cache_file.write_text(json.dumps(payload))
+        dispatch.clear_autotune_cache()
+        assert dispatch.autotune_tiles("score", "blocked", metric="l2sq",
+                                       n=2000, m=250, d=8) == (12345, 678)
+        # and resolve_tiles threads the tuned pair through the policy path
+        reg, rbn, rbm = dispatch.resolve_tiles(
+            "score", KernelPolicy(autotune=True), metric="l2sq",
+            n=2000, m=250, d=8)
+        assert reg.name == "blocked" and (rbn, rbm) == (12345, 678)
+        # an explicit block_n pins the row tile and disables the tuner
+        _, ebn, ebm = dispatch.resolve_tiles(
+            "score", KernelPolicy(autotune=True, block_n=777),
+            metric="l2sq", n=2000, m=250, d=8)
+        assert ebn == 777 and ebm != 678
+    finally:
+        dispatch.clear_autotune_cache()
+
+
+def test_autotune_cache_ignores_stale_and_older_schema_entries(
+        tmp_path, monkeypatch):
+    """Schema-bump migration: a mixed-version cache file must be read
+    without a KeyError — pre-v2 keys never match, and a v2 key written
+    without ``block_m`` (the 1-D tuner's record under a 2-D op's bucket)
+    is re-measured, not trusted."""
+    monkeypatch.setenv("REPRO_KERNELS_CACHE", str(tmp_path))
+    dispatch.clear_autotune_cache()
+    try:
+        stale_key = "v2/score/blocked/cpu/l2sq/n2048/m256/d8"
+        mixed = {
+            # pre-bump schema: unversioned key, single dimension
+            "score/blocked/cpu/l2sq/n2048/m256/d8": {"block_n": 99999},
+            # v2 key lacking the field the 2-D reader needs
+            stale_key: {"block_n": 4096},
+        }
+        cache_file = tmp_path / "autotune.json"
+        cache_file.write_text(json.dumps(mixed))
+        bn, bm = dispatch.autotune_tiles("score", "blocked", metric="l2sq",
+                                         n=2048, m=256, d=8)
+        # stale entry was re-measured and overwritten with the full pair
+        payload = json.loads(cache_file.read_text())
+        assert payload[stale_key]["block_n"] == bn
+        assert payload[stale_key]["block_m"] == bm
+        # the old-schema key survives untouched (ignored, not migrated)
+        assert payload["score/blocked/cpu/l2sq/n2048/m256/d8"] == {
+            "block_n": 99999}
+        # clear_autotune_cache over the mixed file: in-memory drop + reload
+        dispatch.clear_autotune_cache()
+        assert dispatch.autotune_tiles("score", "blocked", metric="l2sq",
+                                       n=2048, m=256, d=8) == (bn, bm)
+        # the 1-D tuner never sees 2-D entries as stale: block_n suffices
+        bn1 = dispatch.autotune_block_n("score", "blocked", metric="l2sq",
+                                        n=2048, m=256, d=8)
+        assert bn1 == bn
+    finally:
+        dispatch.clear_autotune_cache()
+
+
 # ------------------------------------------------- removed legacy aliases
 def test_removed_aliases_raise_type_error_at_every_public_edge():
     """The PR-3 deprecation window is over: every public edge that carried
@@ -299,6 +478,7 @@ def test_removed_aliases_raise_type_error_at_every_public_edge():
         lambda: weighted_summary_outliers(x, w, key, k=3, t=5, block_n=128),
         lambda: min_argmin(x, x[:4], block_n=128),
         lambda: lloyd_step(x, w, x[:4], use_pallas=True),
+        lambda: score(x, x[:4], 1.0, block_n=128),
     ]
     for edge in edges:
         with pytest.raises(TypeError, match="KernelPolicy"):

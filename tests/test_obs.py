@@ -278,7 +278,7 @@ def test_stream_snapshot_covers_tree_and_phases():
         assert c["score.requests{topology=stream}"] == 40
         assert h[f"phase.ingest.leaf_flush{{summarizer={summ}}}"][
             "count"] >= 2
-        assert h["phase.score.pdist{topology=stream}"]["count"] >= 1
+        assert h["phase.score.fused{topology=stream}"]["count"] >= 1
         assert g[f"tree.records{{summarizer={summ}}}"] > 0
         assert any(k.startswith("kernels.dispatch{") for k in c)
 
@@ -376,7 +376,7 @@ def test_session_stats_covers_every_topology(kind):
         # refresh phase timings
         assert h[f"phase.refresh.fit{{topology={kind}}}"]["count"] >= 1
         # score phases
-        assert h[f"phase.score.pdist{{topology={kind}}}"]["count"] >= 1
+        assert h[f"phase.score.fused{{topology={kind}}}"]["count"] >= 1
         # kernel-backend dispatch counts
         assert any(k.startswith("kernels.dispatch{") for k in c)
         if kind == "oneshot":

@@ -219,6 +219,54 @@ def test_concurrent_scores_bit_identical_to_sequential():
         assert a.is_outlier == b.is_outlier
 
 
+def test_fused_score_bit_identical_to_composed():
+    """The read path now scores each micro-batch through ONE fused kernel
+    dispatch (``repro.kernels.score``); for the non-quantized backends it
+    must return bitwise what the composed min_argmin + divide jit it
+    replaced would have — fusing the serving hot path is a pure perf
+    change, never a numerics change."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.pdist.ops import min_argmin
+
+    @functools.partial(jax.jit, static_argnames=("metric", "policy"))
+    def composed_batch(xb, centers, threshold, *, metric, policy):
+        # verbatim: the pre-fusion serving _score_batch
+        dist, amin = min_argmin(xb, centers, metric=metric, policy=policy)
+        return dist, amin, dist / jnp.maximum(threshold, 1e-30)
+
+    cfg = pipeline_config(
+        dim=4, k=3, t=30, topology="stream", leaf_size=512,
+        refresh_every=10**6, micro_batch=64,
+        serving={"queue_bound": 256, "batch_window_ms": 1.0}, seed=0)
+    x = _cluster_data(n=100, seed=12)       # ragged last micro-batch
+    with Session(cfg) as session:
+        session.fit(_cluster_data(n=900, seed=12))
+        model = session.model
+        svc_cfg = session.engine.cfg
+        fused = list(session.score_stream(x, timeout=60.0))
+    assert len(fused) == len(x)
+    mb, j = svc_cfg.micro_batch, 0
+    for i in range(0, len(x), mb):
+        chunk = x[i:i + mb]
+        xb = np.zeros((mb, svc_cfg.dim), np.float32)
+        xb[:len(chunk)] = chunk
+        dist, amin, score = composed_batch(
+            jnp.asarray(xb), model.centers, model.threshold,
+            metric=svc_cfg.metric, policy=svc_cfg.policy)
+        dist, amin, score = (np.asarray(a) for a in (dist, amin, score))
+        for r in range(len(chunk)):
+            got = fused[j]
+            assert got.center == int(amin[r])
+            assert got.distance == float(dist[r])         # bitwise
+            assert got.outlier_score == float(score[r])   # bitwise
+            assert got.is_outlier == bool(score[r] > 1.0)
+            j += 1
+
+
 # ------------------------------------------------------------ worker errors
 def test_worker_error_reraised_on_caller_and_loop_survives():
     """Scoring before any model exists fails inside the worker tick; the

@@ -167,6 +167,26 @@ def test_record_cap_bounds_every_node():
         assert nd.summary.points.shape[0] <= cap
 
 
+def test_record_cap_tightens_under_window():
+    base = dict(dim=3, k=6, t=12, leaf_size=256)
+    full = record_cap(TreeConfig(**base))
+    # windowed live mass is tiny next to the 2^34 stream bound -> fewer
+    # summarizer rounds -> smaller per-summary cap -> smaller checkpoints
+    assert record_cap(TreeConfig(**base, window=4096)) < full
+    # too few checkpoint slots: force-merge can fire and pile unbounded
+    # mass into one summary, so the tightening must NOT apply
+    assert record_cap(
+        TreeConfig(**base, window=4096, max_summaries=4)) == full
+    # the tightened cap still bounds every node on a real windowed run
+    cfg = TreeConfig(**base, window=2048)
+    cap = record_cap(cfg)
+    tree = StreamTree(cfg)
+    tree.ingest(_mk(8192, 3, 9))
+    assert tree.nodes
+    for nd in tree.nodes:
+        assert nd.summary.points.shape[0] <= cap
+
+
 # --------------------------------------------------------- service
 @pytest.fixture(scope="module")
 def served():
