@@ -24,9 +24,14 @@ demand the scheduler's queue-depth / shed / occupancy / per-tenant
 latency series without repeating the list in the workflow.
 
 The validator interprets the (small) subset of JSON Schema the schema
-file uses — type / required / properties / additionalProperties / const /
-minimum — with stdlib only, because the container has no jsonschema
-package and must not grow one.
+file uses — type / required / properties / additionalProperties / items /
+const / minimum — with stdlib only, because the container has no
+jsonschema package and must not grow one.
+
+Snapshots of schema v1 (written before the ``alerts`` + ``trace``
+sections landed) are still accepted: the validator relaxes the checked-in
+v2 schema for them and prints a deprecation note, so archived
+``--metrics-out`` artifacts keep validating.
 
     PYTHONPATH=src python benchmarks/check_obs_snapshot.py \
         --snapshot snap.json [--schema benchmarks/obs_schema.json] \
@@ -88,7 +93,22 @@ def validate(value, schema: dict, path: str = "$") -> list[str]:
                 errs.extend(validate(v, props[k], f"{path}.{k}"))
             elif isinstance(extra, dict):
                 errs.extend(validate(v, extra, f"{path}.{k}"))
+    if isinstance(value, list) and isinstance(schema.get("items"), dict):
+        for i, item in enumerate(value):
+            errs.extend(validate(item, schema["items"], f"{path}[{i}]"))
     return errs
+
+
+def downgrade_schema_to_v1(schema: dict) -> dict:
+    """Relax the checked-in v2 schema for a legacy v1 snapshot: accept
+    ``version: 1`` and don't demand the ``alerts``/``trace`` sections."""
+    schema = json.loads(json.dumps(schema))   # deep copy
+    schema["required"] = [k for k in schema.get("required", [])
+                          if k not in ("alerts", "trace")]
+    version = schema.get("properties", {}).get("version")
+    if isinstance(version, dict):
+        version["const"] = 1
+    return schema
 
 
 def _parse_key(key: str) -> bool:
@@ -158,6 +178,11 @@ def main() -> int:
     args = ap.parse_args()
     snap = json.loads(Path(args.snapshot).read_text())
     schema = json.loads(Path(args.schema).read_text())
+    if snap.get("version") == 1:
+        print("note: snapshot schema v1 is deprecated (v2 adds the "
+              "'alerts' and 'trace' sections); accepting for "
+              "compatibility", file=sys.stderr)
+        schema = downgrade_schema_to_v1(schema)
     prefixes = list(args.require)
     sets = schema.get("x-required-series", {})
     for name in args.require_set:

@@ -143,6 +143,18 @@ def check(bench: dict, thr: dict) -> list[str]:
         else:
             gate("obs_overhead_frac", float(ob["overhead_frac"]),
                  thr["obs_overhead_frac_max"])
+    if "trace_overhead_frac_max" in thr:
+        if ob is None:
+            print("FAIL obs: section missing from bench output "
+                  "(tracing overhead unmeasured)")
+            failures.append("obs_section_trace")
+        elif "trace_overhead_frac" not in ob:
+            print("FAIL obs.trace_overhead_frac: missing from bench "
+                  "output (flight-recorder overhead unmeasured)")
+            failures.append("trace_overhead_frac")
+        else:
+            gate("trace_overhead_frac", float(ob["trace_overhead_frac"]),
+                 thr["trace_overhead_frac_max"])
     sh = bench.get("sharded")
     if sh is not None:
         gate("sharded_cost_ratio", float(sh["cost_ratio"]),

@@ -1,0 +1,181 @@
+"""Validate an exported Chrome trace-event file — stdlib only, CI-gated.
+
+Checks the structural contract Perfetto / ``chrome://tracing`` relies on
+and the invariants our exporter promises:
+
+* top level is ``{"traceEvents": [...], ...}`` with a non-empty list;
+* every event is well-formed: non-empty ``name``, ``ph``, numeric
+  ``ts >= 0``, ``pid``/``tid`` present; complete events (``ph: "X"``)
+  carry a numeric ``dur >= 0``;
+* timestamps are monotone non-decreasing in file order (the exporter
+  sorts);
+* every span carries ``args.trace_id``/``args.span_id``, span ids are
+  unique, and every non-null ``args.parent_id`` references a span that
+  exists in the file (the exporter filters ring-evicted orphans);
+* a parent's interval contains its children's start (small tolerance for
+  clock jitter between retroactively recorded spans).
+
+Usage::
+
+    python benchmarks/check_trace.py trace.json \
+        [--require serve.request --require score.fused ...] \
+        [--min-events 1] [--min-traces 1]
+
+``--require NAME`` demands at least one event whose name equals NAME or
+starts with ``NAME.``.  Exit 0 = valid, 1 = problems (each printed as a
+``FAIL`` line).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# children may start marginally before a retroactively-recorded parent's
+# stamp lands (different threads stamp the endpoints); 50 microseconds
+# absorbs that without hiding real mis-parenting
+_CONTAINMENT_SLOP_US = 50.0
+
+
+def validate_trace(doc) -> list[str]:
+    """Returns a list of problems (empty = valid)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["top level must be an object with a 'traceEvents' key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    if not events:
+        return ["'traceEvents' is empty — nothing was recorded"]
+    spans: dict[int, dict] = {}
+    last_ts = None
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing/empty 'name'")
+        ph = ev.get("ph")
+        if not isinstance(ph, str) or not ph:
+            errors.append(f"{where}: missing 'ph'")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool) or ts < 0:
+            errors.append(f"{where} ({name}): 'ts' must be a number >= 0, "
+                          f"got {ts!r}")
+            ts = None
+        for key in ("pid", "tid"):
+            if key not in ev:
+                errors.append(f"{where} ({name}): missing '{key}'")
+        if ts is not None:
+            if last_ts is not None and ts < last_ts:
+                errors.append(f"{where} ({name}): ts {ts} < previous "
+                              f"{last_ts} — events must be sorted")
+            last_ts = ts
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            errors.append(f"{where} ({name}): missing 'args' object")
+            continue
+        if "trace_id" not in args or "span_id" not in args:
+            errors.append(f"{where} ({name}): args must carry "
+                          f"trace_id and span_id")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if (not isinstance(dur, (int, float)) or isinstance(dur, bool)
+                    or dur < 0):
+                errors.append(f"{where} ({name}): complete event needs a "
+                              f"numeric 'dur' >= 0, got {dur!r}")
+                continue
+            sid = args["span_id"]
+            if sid in spans:
+                errors.append(f"{where} ({name}): duplicate span_id {sid}")
+            spans[sid] = ev
+    # parent existence + containment (second pass: parents can sort later)
+    for ev in events:
+        if not isinstance(ev, dict) or ev.get("ph") != "X":
+            continue
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            continue
+        pid = args.get("parent_id")
+        if pid is None:
+            continue
+        parent = spans.get(pid)
+        if parent is None:
+            errors.append(f"span {args.get('span_id')} ({ev.get('name')}): "
+                          f"parent_id {pid} does not exist in the file")
+            continue
+        if parent["args"].get("trace_id") != args.get("trace_id"):
+            errors.append(f"span {args.get('span_id')} ({ev.get('name')}): "
+                          f"parent {pid} belongs to a different trace")
+        p0 = parent["ts"] - _CONTAINMENT_SLOP_US
+        p1 = parent["ts"] + parent["dur"] + _CONTAINMENT_SLOP_US
+        if not (p0 <= ev["ts"] <= p1):
+            errors.append(f"span {args.get('span_id')} ({ev.get('name')}): "
+                          f"starts at {ev['ts']} outside parent "
+                          f"{parent.get('name')} [{p0}, {p1}]")
+    return errors
+
+
+def check_required(doc, required: list[str]) -> list[str]:
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else []
+    names = {ev.get("name") for ev in events if isinstance(ev, dict)}
+    errors = []
+    for want in required:
+        if not any(isinstance(n, str)
+                   and (n == want or n.startswith(want + "."))
+                   for n in names):
+            errors.append(f"required event {want!r} (or {want}.*) absent")
+    return errors
+
+
+def summarize(doc) -> str:
+    events = doc.get("traceEvents", [])
+    traces = {ev.get("args", {}).get("trace_id") for ev in events
+              if isinstance(ev, dict)}
+    n_spans = sum(1 for ev in events
+                  if isinstance(ev, dict) and ev.get("ph") == "X")
+    return (f"{len(events)} events ({n_spans} spans) across "
+            f"{len(traces)} traces")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate a Chrome trace-event JSON export.")
+    ap.add_argument("trace", help="path to the exported trace file")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="NAME",
+                    help="demand an event named NAME (or NAME.*); "
+                         "repeatable")
+    ap.add_argument("--min-events", type=int, default=1)
+    ap.add_argument("--min-traces", type=int, default=1)
+    args = ap.parse_args()
+    try:
+        doc = json.loads(open(args.trace).read())
+    except (OSError, ValueError) as e:
+        print(f"FAIL: cannot load {args.trace}: {e}")
+        return 1
+    errors = validate_trace(doc)
+    errors += check_required(doc, args.require)
+    if not errors:
+        events = doc["traceEvents"]
+        traces = {ev["args"]["trace_id"] for ev in events}
+        if len(events) < args.min_events:
+            errors.append(f"only {len(events)} events "
+                          f"(< {args.min_events})")
+        if len(traces) < args.min_traces:
+            errors.append(f"only {len(traces)} traces "
+                          f"(< {args.min_traces})")
+    for e in errors:
+        print(f"FAIL: {e}")
+    if errors:
+        print(f"check_trace: {args.trace}: {len(errors)} problem(s)")
+        return 1
+    print(f"check_trace: {args.trace} OK — {summarize(doc)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -267,17 +267,22 @@ def kernel_bench(*, n: int = 32768, m: int = 64, d: int = 8,
 
 def obs_overhead(x, cfg: ServiceConfig, *, repeats: int = 3) -> dict:
     """Instrumentation cost on the ingest hot path: best-of-``repeats``
-    ingest throughput with the metrics plane enabled vs disabled (same
-    data, same config, fresh service per run — jit caches are already
-    warm).  ``overhead_frac`` is the fractional slowdown metrics-on causes
-    (negative = noise); the regression gate holds it <= 5%.
+    ingest throughput at three settings (same data, same config, fresh
+    service per run — jit caches are already warm): both planes off,
+    metrics on / tracing off, and metrics + flight-recorder tracing on
+    (full sampling — every ingest request traced).  ``overhead_frac`` is
+    the fractional slowdown the metrics plane alone causes and
+    ``trace_overhead_frac`` the *additional* slowdown from structured
+    tracing on top of metrics (negative = noise); the regression gate
+    holds each <= 5%.
     """
     from repro import obs
 
     n, batch = x.shape[0], 4096
 
-    def best_pts_per_s(enabled: bool) -> float:
-        prev = obs.set_metrics_enabled(enabled)
+    def best_pts_per_s(metrics: bool, tracing: bool) -> float:
+        prev_m = obs.set_metrics_enabled(metrics)
+        prev_t = obs.set_tracing_enabled(tracing)
         try:
             best = float("inf")
             for _ in range(repeats):
@@ -287,15 +292,19 @@ def obs_overhead(x, cfg: ServiceConfig, *, repeats: int = 3) -> dict:
                     svc.ingest(x[i:i + batch])
                 best = min(best, time.perf_counter() - t0)
         finally:
-            obs.set_metrics_enabled(prev)
+            obs.set_tracing_enabled(prev_t)
+            obs.set_metrics_enabled(prev_m)
         return n / best
 
-    on = best_pts_per_s(True)
-    off = best_pts_per_s(False)
+    on = best_pts_per_s(True, False)
+    off = best_pts_per_s(False, False)
+    trace_on = best_pts_per_s(True, True)
     return {
         "ingest_pts_per_s_metrics_on": round(on, 1),
         "ingest_pts_per_s_metrics_off": round(off, 1),
+        "ingest_pts_per_s_trace_on": round(trace_on, 1),
         "overhead_frac": round(1.0 - on / off, 4),
+        "trace_overhead_frac": round(1.0 - trace_on / on, 4),
     }
 
 

@@ -64,6 +64,9 @@ def stream_point(bench: dict) -> dict:
     ob = bench.get("obs")
     if ob:
         pt["obs_overhead_frac"] = round(float(ob["overhead_frac"]), 4)
+        if "trace_overhead_frac" in ob:
+            pt["trace_overhead_frac"] = round(
+                float(ob["trace_overhead_frac"]), 4)
     sh = bench.get("sharded")
     if sh:
         pt["sharded_cost_ratio"] = round(float(sh["cost_ratio"]), 4)

@@ -8,8 +8,17 @@ staleness, kernel-backend dispatch counts.  The same snapshot dict feeds
 ``repro.render_prometheus`` for a real scrape endpoint; the last section
 prints the exposition-format text so you can see what Prometheus would.
 
+Because the stream *drifts*, the online monitors eventually fire: the
+dashboard's alerts pane shows the typed ``Alert`` records from the
+snapshot's ``alerts`` section (outlier-rate EWMA vs the configured z/n
+budget, model staleness, shed burn) as they appear.  ``--trace-out FILE``
+additionally dumps the flight recorder's Chrome trace at the end — load
+it in Perfetto or ``chrome://tracing`` to see every ingest request and
+cadence refresh as a stitched span tree.
+
     PYTHONPATH=src python examples/metrics_dashboard.py
     PYTHONPATH=src python examples/metrics_dashboard.py --batches 30 --prom
+    PYTHONPATH=src python examples/metrics_dashboard.py --trace-out t.json
 """
 import argparse
 
@@ -58,6 +67,21 @@ def dashboard(snap):
             f"{k.split('{', 1)[1][:-1]}:{v}" for k, v in sorted(c.items())
             if k.startswith("kernels.dispatch{")),
     ]
+    tr = snap.get("trace")
+    if tr:
+        lines.append(f"  trace      {tr['recorded']} spans / "
+                     f"{tr['traces']} traces "
+                     f"(sample={tr['sample_rate']:g} "
+                     f"dropped={tr['dropped']})")
+    alerts = snap.get("alerts", [])
+    if alerts:
+        lines.append("  alerts:")
+        for a in alerts:
+            labels = ",".join(f"{k}={v}" for k, v in a["labels"].items())
+            lines.append(f"    [{a['severity']:<4s}] {a['name']}"
+                         f"{{{labels}}}: {a['message']}")
+    else:
+        lines.append("  alerts     (none firing)")
     return "\n".join(lines)
 
 
@@ -71,6 +95,8 @@ def main():
                     help="print the dashboard every N batches")
     ap.add_argument("--prom", action="store_true",
                     help="also print the Prometheus exposition text")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="dump the flight recorder as Chrome trace JSON")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -98,6 +124,14 @@ def main():
           f"(counters={len(snap['counters'])}, "
           f"gauges={len(snap['gauges'])}, "
           f"histograms={len(snap['histograms'])})")
+    alerts = snap.get("alerts", [])
+    print(f"alerts firing: {len(alerts)}"
+          + "".join(f"\n  [{a['severity']}] {a['name']}: {a['message']}"
+                    for a in alerts))
+    if args.trace_out:
+        path = sess.dump_trace(args.trace_out)
+        print(f"wrote Chrome trace to {path} "
+              f"(load in Perfetto or chrome://tracing)")
     if args.prom:
         print("\n--- prometheus exposition (first 30 lines) ---")
         print("\n".join(render_prometheus(snap).splitlines()[:30]))

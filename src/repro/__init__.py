@@ -21,7 +21,11 @@ the contract (CI asserts every name resolves).  Four groups:
   ``Session.stats()`` snapshots it, ``trace``/``counter``/``gauge``/
   ``histogram`` feed it, ``render_prometheus`` formats it for scraping,
   ``set_metrics_enabled`` (or env ``REPRO_METRICS=0``) switches the whole
-  plane off.
+  plane off.  Request-level tracing rides the same plane: a bounded
+  ``FlightRecorder`` of structured spans (``TraceSpec`` config knobs,
+  ``configure_tracing``/``set_tracing_enabled``, ``dump_trace`` exports
+  Chrome trace-event JSON) plus typed ``Alert`` records from the online
+  drift/staleness/shed monitors in ``snapshot()["alerts"]``.
 
 Deeper internals stay importable from their modules (``repro.kernels``,
 ``repro.summarize``, ``repro.stream``, ``repro.core``) but only the names
@@ -52,7 +56,9 @@ from repro.serve import (
 )
 from repro.checkpoint.manager import CheckpointManager
 from repro.obs import (
-    MetricsRegistry, render_prometheus, set_metrics_enabled, using_registry,
+    Alert, FlightRecorder, MetricsRegistry, TraceSpec, apply_trace_spec,
+    configure_tracing, dump_trace, render_prometheus, set_metrics_enabled,
+    set_tracing_enabled, using_registry,
 )
 
 __all__ = [
@@ -77,4 +83,6 @@ __all__ = [
     # observability
     "MetricsRegistry", "render_prometheus", "set_metrics_enabled",
     "using_registry",
+    "Alert", "FlightRecorder", "TraceSpec", "apply_trace_spec",
+    "configure_tracing", "dump_trace", "set_tracing_enabled",
 ]

@@ -8,13 +8,16 @@ of a run — problem, summarizer policy, kernel policy, topology — and
 behind it, bit-identical to calling those layers directly.
 ``Session.score_stream`` adds the async serving path (``repro.serve``:
 continuous batching + admission control, configured by the config's
-optional ``serving`` section).  ``python -m repro`` (``cli.py``)
+optional ``serving`` section); the optional ``tracing`` section
+(``repro.obs.TraceSpec``) pins the flight recorder's sampling knobs, and
+``Session.dump_trace`` exports it.  ``python -m repro`` (``cli.py``)
 executes a config file.
 """
 from repro.api.config import (  # noqa: F401
     PARTITIONS, PipelineConfig, ProblemSpec, SITE_BUDGETS, TOPOLOGIES,
     TopologySpec, pipeline_config,
 )
+from repro.obs.tracing import TraceSpec  # noqa: F401
 from repro.api.session import OneshotEngine, Session  # noqa: F401
 from repro.serve import (  # noqa: F401
     ScoreTicket, ServingScheduler, ServingSpec, ShedReject,

@@ -27,7 +27,12 @@ Subcommands:
 * ``bench-score`` — fit, then measure the query path (p50/p99 latency and
                     throughput over ``--repeat`` rounds of ``--queries``);
 * ``stats``       — fit + score like ``run``, then emit the full metrics
-                    snapshot (``repro.obs``) as JSON or Prometheus text.
+                    snapshot (``repro.obs``) as JSON or Prometheus text;
+* ``trace``       — fit + score through the *async serving* path, then
+                    export the flight recorder as Chrome trace-event JSON
+                    (Perfetto / ``chrome://tracing``) or JSON-lines.
+
+``serve --trace-out FILE`` dumps the same Chrome trace after streaming.
 
 ``serve --metrics-interval N`` additionally emits the live snapshot as one
 JSON line every ~N seconds while streaming (``--metrics-out`` to redirect
@@ -240,6 +245,10 @@ def cmd_serve(args) -> None:
         step = session.save(args.checkpoint)
         print(f"checkpointed to {args.checkpoint} @ step {step}; "
               f"Session.load() restores topology + policies from it alone")
+    if args.trace_out:
+        path = session.dump_trace(args.trace_out)
+        print(f"wrote Chrome trace to {path} "
+              f"(load in Perfetto or chrome://tracing)")
     # final snapshot after everything (incl. checkpoint metrics) happened
     emitter.emit(session, force=True)
     emitter.close()
@@ -327,6 +336,37 @@ def cmd_stats(args) -> None:
         print(f"wrote {args.format} snapshot to {args.out}")
 
 
+def cmd_trace(args) -> None:
+    """Exercise the pipeline end to end *through the async serving
+    scheduler*, then export the flight recorder — the quickest way to a
+    Perfetto-loadable timeline of ingest -> refresh -> stitched serve
+    requests (admission / queue wait / tick / fused score / drain)."""
+    from repro import obs
+    from repro.serve import ShedReject
+
+    pipeline, data_spec = load_config_file(args.config)
+    x, out_ids = make_data(pipeline, data_spec)
+    session = Session(pipeline)
+    if args.sample_rate is not None:
+        # CLI override wins over the artifact's tracing section
+        obs.configure_tracing(sample_rate=args.sample_rate)
+    session.fit(x)
+    q, truth = _sample_queries(x, out_ids, args.queries, pipeline.seed)
+    results = list(session.score_stream(q, timeout=120.0))
+    session.close()
+    scored = [r for r in results if not isinstance(r, ShedReject)]
+    _report_scores(scored, truth if len(scored) == len(results) else None)
+    stats = obs.get_default_recorder().snapshot_section()
+    print(f"  flight recorder: {stats['recorded']} spans across "
+          f"{stats['traces']} traces (sample_rate={stats['sample_rate']}, "
+          f"dropped={stats['dropped']})")
+    path = session.dump_trace(args.out, fmt=args.format)
+    print(f"wrote {args.format} trace to {path}"
+          + (" (load in Perfetto or chrome://tracing)"
+             if args.format == "chrome" else ""))
+    print("ok")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -366,6 +406,9 @@ def main(argv=None) -> None:
     p_srv.add_argument("--offered-rps", type=float, default=None,
                        help="offered load (rows/s) for the --clients phase; "
                             "default: 1.5x a measured capacity estimate")
+    p_srv.add_argument("--trace-out", default=None, metavar="FILE",
+                       help="after streaming, dump the flight recorder as "
+                            "Chrome trace-event JSON to FILE")
     p_srv.set_defaults(fn=cmd_serve)
 
     p_bs = sub.add_parser("bench-score", help="measure the query path")
@@ -387,6 +430,22 @@ def main(argv=None) -> None:
     p_st.add_argument("--out", default="-",
                       help="file path, or '-' for stdout")
     p_st.set_defaults(fn=cmd_stats)
+
+    p_tr = sub.add_parser("trace",
+                          help="fit + score a config through the async "
+                               "serving path, then export the flight "
+                               "recorder (Chrome trace / JSONL)")
+    p_tr.add_argument("--config", required=True)
+    p_tr.add_argument("--queries", type=int, default=64,
+                      help="sample queries to score through score_stream")
+    p_tr.add_argument("--format", choices=("chrome", "jsonl"),
+                      default="chrome", help="trace encoding")
+    p_tr.add_argument("--sample-rate", type=float, default=None,
+                      help="head-sampling rate override (default: the "
+                           "config's tracing section, else 1.0)")
+    p_tr.add_argument("--out", default="trace.json",
+                      help="output file path")
+    p_tr.set_defaults(fn=cmd_trace)
 
     args = ap.parse_args(argv)
     args.fn(args)

@@ -41,6 +41,7 @@ from typing import Optional
 from repro.kernels.dispatch import (KernelPolicy, get_default_policy,
                                     BACKENDS)
 from repro.kernels.pdist.ref import METRICS
+from repro.obs.tracing import TraceSpec
 from repro.serve.spec import SHED_POLICIES, ServingSpec
 from repro.stream.service import ServiceConfig
 from repro.stream.sharded import ShardedServiceConfig
@@ -160,6 +161,10 @@ class PipelineConfig:
     # None = serve with ServingSpec() defaults when score_stream is used;
     # set explicitly to pin admission control / batching in the artifact
     serving: Optional[ServingSpec] = None
+    # None = process-default flight recorder (env knobs); set explicitly
+    # to pin sampling / ring size in the artifact — applied to the
+    # telemetry plane when a Session is constructed from this config
+    tracing: Optional[TraceSpec] = None
 
     def __post_init__(self):
         _require(isinstance(self.problem, ProblemSpec),
@@ -170,6 +175,10 @@ class PipelineConfig:
                  or isinstance(self.serving, ServingSpec),
                  f"serving must be a ServingSpec or None, "
                  f"got {self.serving!r}")
+        _require(self.tracing is None
+                 or isinstance(self.tracing, TraceSpec),
+                 f"tracing must be a TraceSpec or None, "
+                 f"got {self.tracing!r}")
         if self.summarizer is None:
             object.__setattr__(self, "summarizer", get_default_summarizer())
         if self.kernels is None:
@@ -210,6 +219,8 @@ class PipelineConfig:
         }
         if self.serving is not None:
             d["serving"] = dataclasses.asdict(self.serving)
+        if self.tracing is not None:
+            d["tracing"] = dataclasses.asdict(self.tracing)
         return d
 
     @classmethod
@@ -231,12 +242,13 @@ class PipelineConfig:
             second_iters = d.pop("second_iters", 25)
             seed = d.pop("seed", 0)
             serving = d.pop("serving", None)
+            tracing = d.pop("tracing", None)
         except KeyError as e:
             raise ValueError(f"config is missing required section {e}")
         if d:
             raise ValueError(f"unknown config keys {sorted(d)}; expected "
                              f"problem/topology/summarizer/kernels/"
-                             f"second_iters/seed/serving")
+                             f"second_iters/seed/serving/tracing")
         return cls(
             problem=_spec_from(ProblemSpec, "problem", problem),
             topology=_spec_from(TopologySpec, "topology", topology),
@@ -245,6 +257,7 @@ class PipelineConfig:
             second_iters=second_iters,
             seed=seed,
             serving=_serving_from(serving),
+            tracing=_tracing_from(tracing),
         )
 
     def to_json(self, *, indent: int = 2) -> str:
@@ -327,6 +340,18 @@ def _serving_from(d) -> Optional[ServingSpec]:
     return _spec_from(ServingSpec, "serving", d)
 
 
+def _tracing_from(d) -> Optional[TraceSpec]:
+    if d is None or isinstance(d, TraceSpec):
+        return d
+    if isinstance(d, bool):
+        # bare flag: tracing=False turns the flight recorder off
+        return TraceSpec(enabled=d)
+    if isinstance(d, (int, float)):
+        # bare number: head-sampling rate with default ring/seed
+        return TraceSpec(sample_rate=float(d))
+    return _spec_from(TraceSpec, "tracing", d)
+
+
 def _kernels_from(d) -> Optional[KernelPolicy]:
     if d is None or isinstance(d, KernelPolicy):
         return d
@@ -352,6 +377,7 @@ def pipeline_config(
     second_iters: int = 25,
     seed: int = 0,
     serving=None,
+    tracing=None,
     **topology_kwargs,
 ) -> PipelineConfig:
     """Flat-keyword constructor — the ergonomic front door.
@@ -361,7 +387,9 @@ def pipeline_config(
     ``summarizer`` / ``kernels`` also accept bare names
     (``summarizer="coreset"``, ``kernels="pallas"``); ``serving`` accepts
     a :class:`repro.serve.ServingSpec`, a ``{queue_bound, ...}`` dict, or
-    a bare shed policy name (``serving="wait"``).
+    a bare shed policy name (``serving="wait"``); ``tracing`` accepts a
+    :class:`repro.obs.TraceSpec`, a ``{sample_rate, ...}`` dict, a bare
+    sampling rate (``tracing=0.1``) or flag (``tracing=False``).
 
         cfg = pipeline_config(dim=5, k=20, t=500, topology="sharded",
                               sites=4, window=100_000)
@@ -375,4 +403,5 @@ def pipeline_config(
         second_iters=second_iters,
         seed=seed,
         serving=_serving_from(serving),
+        tracing=_tracing_from(tracing),
     )

@@ -251,6 +251,11 @@ class Session:
         self.config = config
         self._serving: Optional[ServingScheduler] = None
         self._attach_lock = threading.Lock()
+        if config.tracing is not None:
+            # pin the process flight recorder to the artifact's knobs
+            # (sampling, ring, seed) before the engine captures handles
+            from repro import obs
+            obs.apply_trace_spec(config.tracing)
         if _engine is not None:
             self.engine = _engine
         else:
@@ -376,6 +381,19 @@ class Session:
         """
         from repro import obs
         return obs.snapshot()
+
+    def dump_trace(self, path, fmt: str = "chrome"):
+        """Write the flight recorder's buffered spans to ``path``.
+
+        ``fmt="chrome"`` (default) writes Chrome trace-event JSON — load
+        it in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``
+        to see each request/refresh as one stitched timeline.
+        ``fmt="jsonl"`` writes one JSON record per span/event.  Returns
+        the path written.  The recorder is process-wide, like
+        :meth:`stats`.
+        """
+        from repro import obs
+        return obs.dump_trace(path, fmt=fmt)
 
     @property
     def last_fit(self):

@@ -506,10 +506,11 @@ def autotune_block_n(
     obs.counter("kernels.autotune_cache", result="miss").inc()
     _tuning = True
     try:
-        cands = sorted({min(c, bn_rows) for c in reg.tune_candidates})
-        timings = measure_block_ns(op, backend, metric=metric, n=bn_rows,
-                                   m=bm, d=bd, candidates=cands,
-                                   repeats=repeats)
+        with obs.trace("kernels.autotune", op=op, backend=backend):
+            cands = sorted({min(c, bn_rows) for c in reg.tune_candidates})
+            timings = measure_block_ns(op, backend, metric=metric, n=bn_rows,
+                                       m=bm, d=bd, candidates=cands,
+                                       repeats=repeats)
     finally:
         _tuning = False
     best = min(timings, key=timings.get)
@@ -562,14 +563,15 @@ def autotune_tiles(
     obs.counter("kernels.autotune_cache", result="miss").inc()
     _tuning = True
     try:
-        bns = sorted({min(c, bn_rows) for c in reg.tune_candidates})
-        bms = sorted({min(c, bm_cols) for c in (reg.tune_candidates_m
-                                                or (reg.default_block_m(
-                                                    platform),))})
-        pairs = [(bn, bm) for bn in bns for bm in bms]
-        timings = measure_tiles(op, backend, metric=metric, n=bn_rows,
-                                m=bm_cols, d=bd, candidates=pairs,
-                                repeats=repeats)
+        with obs.trace("kernels.autotune", op=op, backend=backend):
+            bns = sorted({min(c, bn_rows) for c in reg.tune_candidates})
+            bms = sorted({min(c, bm_cols) for c in (reg.tune_candidates_m
+                                                    or (reg.default_block_m(
+                                                        platform),))})
+            pairs = [(bn, bm) for bn in bns for bm in bms]
+            timings = measure_tiles(op, backend, metric=metric, n=bn_rows,
+                                    m=bm_cols, d=bd, candidates=pairs,
+                                    repeats=repeats)
     finally:
         _tuning = False
     best = min(timings, key=timings.get)

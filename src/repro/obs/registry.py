@@ -50,7 +50,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-SNAPSHOT_VERSION = 1
+SNAPSHOT_VERSION = 2
 
 # Latency-oriented log-spaced bucket edges in seconds ("le" upper bounds).
 DEFAULT_BUCKETS = (
@@ -281,7 +281,8 @@ class MetricsRegistry:
     whether telemetry is on.
     """
 
-    def __init__(self, enabled: Optional[bool] = None):
+    def __init__(self, enabled: Optional[bool] = None, *,
+                 recorder=None, monitors=None):
         if enabled is None:
             enabled = os.environ.get("REPRO_METRICS", "1") != "0"
         self.enabled = bool(enabled)
@@ -289,6 +290,18 @@ class MetricsRegistry:
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
+        # Each registry carries its own flight recorder and monitor hub
+        # so ``using_registry`` isolates trace/alert state exactly like
+        # metric state.  Imported lazily: tracing/monitors import this
+        # module at their top level.
+        if recorder is None:
+            from repro.obs.tracing import FlightRecorder
+            recorder = FlightRecorder()
+        if monitors is None:
+            from repro.obs.monitors import MonitorHub
+            monitors = MonitorHub()
+        self.recorder = recorder
+        self.monitors = monitors
 
     # ------------------------------------------------------------ metrics
     def counter(self, name: str, **labels) -> Counter:
@@ -342,6 +355,8 @@ class MetricsRegistry:
             "gauges": {k: g.get() for k, g in sorted(gauges.items())},
             "histograms": {k: h.snapshot_entry()
                            for k, h in sorted(hists.items())},
+            "alerts": self.monitors.snapshot_alerts(),
+            "trace": self.recorder.snapshot_section(),
         }
 
     def reset(self) -> None:

@@ -35,9 +35,21 @@ Telemetry (``repro.obs``): ``serve.queue_depth`` gauge,
 histogram (batched rows / max_batch per tick), ``serve.ticks`` counter,
 and per-tenant end-to-end latency in
 ``serve.latency{tenant=,topology=scheduler}``.
+
+Tracing: every submitted row starts a trace in the flight recorder;
+its lifecycle spans (``serve.request`` root, ``serve.admission``,
+``serve.queue_wait``, ``serve.tick``) are recorded from timestamps the
+scheduler stamps on the ticket, so an unsampled request costs two id
+allocations and nothing else.  The worker carries the first sampled
+ticket's context across the thread boundary (``obs.use_context``)
+around the engine submit/drain, so that request's trace stitches
+admission -> queue wait -> tick -> ``score.fused`` -> drain into ONE
+timeline.  ``ShedReject`` and worker-tick errors are force-recorded
+(they bypass sampling) with the rejecting tenant and live queue depth.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 import weakref
@@ -87,17 +99,21 @@ class ScoreTicket:
     worker-side exception is re-raised here, on the caller's thread.
     """
 
-    __slots__ = ("request_id", "tenant", "t_submit", "t_done",
-                 "_event", "_value", "_error")
+    __slots__ = ("request_id", "tenant", "t_submit", "t_admit",
+                 "t_dequeue", "t_done", "_event", "_value", "_error",
+                 "_trace")
 
     def __init__(self, request_id: int, tenant: str):
         self.request_id = request_id
         self.tenant = tenant
         self.t_submit = time.perf_counter()
+        self.t_admit: Optional[float] = None    # stamped at enqueue
+        self.t_dequeue: Optional[float] = None  # stamped when a tick pops it
         self.t_done: Optional[float] = None
         self._event = threading.Event()
         self._value = None
         self._error: Optional[BaseException] = None
+        self._trace = None                      # SpanContext or None
 
     def _resolve(self, value) -> None:
         self.t_done = time.perf_counter()
@@ -177,6 +193,9 @@ class ServingScheduler:
         self._worker_errors = obs.counter("serve.worker_errors")
         self._by_tenant: dict = {}
         self._shed_counters: dict = {}
+        reg = obs.get_default_registry()
+        self._recorder = reg.recorder
+        self._monitors = reg.monitors
 
     def _tenant_metrics(self, tenant: str):
         m = self._by_tenant.get(tenant)
@@ -195,6 +214,51 @@ class ServingScheduler:
             self._shed_counters[(tenant, reason)] = c
         c.inc()
 
+    # ------------------------------------------------------------ tracing
+    def _record_shed(self, ticket: ScoreTicket, reason: str,
+                     depth: int) -> None:
+        """Force-record a shed so overload incidents survive sampling."""
+        self._recorder.record_event(
+            "serve.shed", ticket._trace, force=True,
+            attrs={"request_id": ticket.request_id, "tenant": ticket.tenant,
+                   "reason": reason, "queue_depth": depth})
+        self._record_ticket_trace(ticket, "shed")
+
+    def _record_ticket_trace(self, ticket: ScoreTicket, status: str,
+                             tick_span_id: Optional[int] = None,
+                             batch_size: Optional[int] = None) -> None:
+        """Record a resolved ticket's lifecycle spans from its stamps.
+
+        Spans are written retroactively (not opened live) so pending
+        tickets carry only timestamps; non-ok statuses force-record.
+        """
+        tctx = ticket._trace
+        if tctx is None:
+            return
+        force = status != "ok"
+        if not (tctx.sampled or force):
+            return
+        rec = self._recorder
+        rec.record_span(
+            "serve.request", tctx, t0=ticket.t_submit, t1=ticket.t_done,
+            span_id=tctx.span_id, parent_id=None, status=status, force=force,
+            attrs={"request_id": ticket.request_id, "tenant": ticket.tenant})
+        if ticket.t_admit is None:
+            return
+        rec.record_span("serve.admission", tctx, t0=ticket.t_submit,
+                        t1=ticket.t_admit, parent_id=tctx.span_id,
+                        force=force)
+        if ticket.t_dequeue is None:
+            return
+        rec.record_span("serve.queue_wait", tctx, t0=ticket.t_admit,
+                        t1=ticket.t_dequeue, parent_id=tctx.span_id,
+                        force=force)
+        attrs = {} if batch_size is None else {"batch": batch_size}
+        rec.record_span("serve.tick", tctx, t0=ticket.t_dequeue,
+                        t1=ticket.t_done, span_id=tick_span_id,
+                        parent_id=tctx.span_id, status=status, force=force,
+                        attrs=attrs)
+
     # ------------------------------------------------------------ admission
     def submit(self, points, *, tenant: str = "default") -> list[ScoreTicket]:
         """Admit query rows; returns one (possibly pre-resolved) ticket per
@@ -210,15 +274,20 @@ class ServingScheduler:
         spec = self.spec
         tickets: list[ScoreTicket] = []
         n_admitted = 0
+        n_shed = 0
         with self._cond:
             for row in x:
                 ticket = ScoreTicket(self._next_id, tenant)
                 self._next_id += 1
+                ticket._trace = self._recorder.new_trace()
                 tickets.append(ticket)
                 if self._stop:
+                    depth = len(self._queue)
                     ticket._resolve(ShedReject(ticket.request_id, tenant,
-                                               "shutdown", len(self._queue)))
+                                               "shutdown", depth))
                     self._count_shed(tenant, "shutdown")
+                    self._record_shed(ticket, "shutdown", depth)
+                    n_shed += 1
                     continue
                 reason = self._admission_block(tenant)
                 if reason is not None and spec.shed_policy == "wait":
@@ -228,10 +297,14 @@ class ServingScheduler:
                     if self._stop:
                         reason = "shutdown"
                 if reason is not None:
+                    depth = len(self._queue)
                     ticket._resolve(ShedReject(ticket.request_id, tenant,
-                                               reason, len(self._queue)))
+                                               reason, depth))
                     self._count_shed(tenant, reason)
+                    self._record_shed(ticket, reason, depth)
+                    n_shed += 1
                     continue
+                ticket.t_admit = time.perf_counter()
                 self._queue.append((ticket, row))
                 self._pending[tenant] = self._pending.get(tenant, 0) + 1
                 n_admitted += 1
@@ -241,6 +314,8 @@ class ServingScheduler:
                 self._cond.notify_all()   # wake the worker (and waiters)
         if n_admitted:
             admitted_c.inc(n_admitted)
+        if n_admitted or n_shed:
+            self._monitors.observe_admission(n_admitted, n_shed)
         return tickets
 
     def _admission_block(self, tenant: str) -> Optional[str]:
@@ -286,7 +361,9 @@ class ServingScheduler:
                         self._cond.wait(remaining)
                 take = min(self.max_batch, len(self._queue))
                 batch = [self._queue.popleft() for _ in range(take)]
+                t_pop = time.perf_counter()
                 for ticket, _ in batch:
+                    ticket.t_dequeue = t_pop
                     self._pending[ticket.tenant] -= 1
                 self._inflight += take
                 self._cond.notify_all()   # queue space freed: wake waiters
@@ -305,8 +382,24 @@ class ServingScheduler:
         self._ticks.inc()
         self._occupancy.observe(len(batch) / self.max_batch)
         rows = np.stack([row for _, row in batch])
+        # cross-thread stitch: carry the first sampled ticket's trace into
+        # the engine work so its score.enqueue/batch/fused/drain spans nest
+        # under this tick (one "primary" per tick keeps the worker O(1))
+        rec = self._recorder
+        primary: Optional[ScoreTicket] = None
+        tick_span_id: Optional[int] = None
+        for ticket, _ in batch:
+            if ticket._trace is not None and ticket._trace.sampled:
+                primary = ticket
+                tick_span_id = rec.alloc_id()
+                break
+        if primary is not None:
+            engine_ctx = obs.use_context(obs.SpanContext(
+                primary._trace.trace_id, tick_span_id, True))
+        else:
+            engine_ctx = contextlib.nullcontext()
         try:
-            with self.engine_lock:
+            with self.engine_lock, engine_ctx:
                 try:
                     ids = self.engine.submit(rows)
                     results = self.engine.drain()
@@ -320,8 +413,18 @@ class ServingScheduler:
                     raise
         except BaseException as e:
             self._worker_errors.inc()
+            rec.record_event(
+                "serve.worker_error",
+                primary._trace if primary is not None else None, force=True,
+                attrs={"error": type(e).__name__, "batch": len(batch),
+                       "queue_depth": len(self._queue),
+                       "tenants": sorted({t.tenant for t, _ in batch})})
             for ticket, _ in batch:
                 ticket._fail(e)
+                self._record_ticket_trace(
+                    ticket, "error",
+                    tick_span_id if ticket is primary else None,
+                    batch_size=len(batch))
             return
         by_id = {r.request_id: r for r in results}
         if len(results) != len(batch) or any(rid not in by_id for rid in ids):
@@ -330,14 +433,27 @@ class ServingScheduler:
                 f"engine returned {len(results)} results for a "
                 f"{len(batch)}-row tick — its read queue was touched "
                 f"outside the scheduler's engine_lock")
+            rec.record_event(
+                "serve.worker_error",
+                primary._trace if primary is not None else None, force=True,
+                attrs={"error": "ResultMisalignment", "batch": len(batch),
+                       "queue_depth": len(self._queue),
+                       "tenants": sorted({t.tenant for t, _ in batch})})
             for ticket, _ in batch:
                 ticket._fail(err)
+                self._record_ticket_trace(
+                    ticket, "error",
+                    tick_span_id if ticket is primary else None,
+                    batch_size=len(batch))
             return
         for (ticket, _), rid in zip(batch, ids):
             ticket._resolve(by_id[rid])
             _, completed_c, lat_h = self._tenant_metrics(ticket.tenant)
             completed_c.inc()
             lat_h.observe(ticket.latency_s)
+            self._record_ticket_trace(
+                ticket, "ok", tick_span_id if ticket is primary else None,
+                batch_size=len(batch))
 
     # ------------------------------------------------------------ lifecycle
     def flush(self, timeout: Optional[float] = None) -> bool:
@@ -377,6 +493,7 @@ class ServingScheduler:
                     ticket._resolve(ShedReject(ticket.request_id,
                                                ticket.tenant, "shutdown", 0))
                     self._count_shed(ticket.tenant, "shutdown")
+                    self._record_shed(ticket, "shutdown", 0)
 
     def __enter__(self) -> "ServingScheduler":
         return self

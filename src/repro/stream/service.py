@@ -200,6 +200,9 @@ class ServingFrontEnd:
         self._next_version = 0
         self._since_refresh = 0
         self.last_fit: Optional[FitStats] = None
+        # (recorder, ctx, t_start) of the in-flight async refresh trace
+        self._refresh_trace: tuple = (None, None, 0.0)
+        self._monitors = obs.get_default_registry().monitors
         obs.gauge("model.seconds_since_install",
                   topology=self._topology).set_fn(self.seconds_since_install)
 
@@ -222,18 +225,24 @@ class ServingFrontEnd:
         the refresh cadence, so one huge call still refreshes on schedule
         rather than once at the end."""
         i, n = 0, x.shape[0]
-        while i < n:
-            take = min(self.cfg.refresh_every - self._since_refresh, n - i)
-            if take <= 0:   # e.g. restored with a smaller refresh_every
-                self._cadence_refresh()
-                continue
-            with obs.trace("ingest", topology=self._topology):
-                sink(x[i:i + take], None if w is None else w[i:i + take])
-            obs.counter("ingest.points", topology=self._topology).inc(take)
-            self._since_refresh += take
-            i += take
-            if self._since_refresh >= self.cfg.refresh_every:
-                self._cadence_refresh()
+        # one trace per ingest call: chunk + tree spans nest under it,
+        # while any cadence refresh it triggers opens its own trace
+        with obs.root_trace("ingest.request", topology=self._topology,
+                            points=n):
+            while i < n:
+                take = min(self.cfg.refresh_every - self._since_refresh,
+                           n - i)
+                if take <= 0:   # e.g. restored with a smaller refresh_every
+                    self._cadence_refresh()
+                    continue
+                with obs.trace("ingest", topology=self._topology):
+                    sink(x[i:i + take], None if w is None else w[i:i + take])
+                obs.counter("ingest.points",
+                            topology=self._topology).inc(take)
+                self._since_refresh += take
+                i += take
+                if self._since_refresh >= self.cfg.refresh_every:
+                    self._cadence_refresh()
 
     def _cadence_refresh(self) -> None:
         self.refresh(blocking=not self.cfg.async_refresh)
@@ -265,6 +274,16 @@ class ServingFrontEnd:
         obs.counter("refresh.count", topology=self._topology).inc()
         obs.counter("refresh.records_folded",
                     topology=self._topology).inc(int(records))
+        # re-anchor the drift monitors to the newly installed model: the
+        # healthy outlier fraction is the paper's z/n budget — the share
+        # of the trained mass the fit was allowed to discard
+        t = getattr(self.cfg, "t", None)
+        if t is not None:
+            self._monitors.set_outlier_budget(
+                self._topology,
+                float(t) / max(float(model.trained_weight), 1.0))
+        self._monitors.set_staleness_source(self._topology,
+                                            self.seconds_since_install)
 
     def refresh(self, *, blocking: bool = True) -> Optional[ModelState]:
         """Fit a new model on the current root.
@@ -280,11 +299,13 @@ class ServingFrontEnd:
         if blocking:
             self.join_refresh()
             self._next_version += 1
-            with obs.trace("refresh.gather", topology=self._topology):
-                fit = self._fit_closure(self._next_version)
-                records = self._root_records()
-            model, fit_s = self._timed_fit(fit)
-            self._install(model, fit_s, records)
+            with obs.root_trace("refresh", topology=self._topology,
+                                version=self._next_version):
+                with obs.trace("refresh.gather", topology=self._topology):
+                    fit = self._fit_closure(self._next_version)
+                    records = self._root_records()
+                model, fit_s = self._timed_fit(fit)
+                self._install(model, fit_s, records)
             self._since_refresh = 0
             return model
         if self._worker is not None:
@@ -294,19 +315,41 @@ class ServingFrontEnd:
         self._since_refresh = 0
         return None
 
+    def _end_refresh_trace(self, status: str = "ok",
+                           error: Optional[BaseException] = None) -> None:
+        """Record the async refresh trace's root span at install time."""
+        rec, tctx, t_start = self._refresh_trace
+        self._refresh_trace = (None, None, 0.0)
+        if tctx is None:
+            return
+        attrs: dict = {"topology": self._topology}
+        if error is not None:
+            attrs["error"] = type(error).__name__
+        rec.record_span("refresh", tctx, t0=t_start, t1=time.perf_counter(),
+                        span_id=tctx.span_id, parent_id=None, status=status,
+                        force=status == "error", attrs=attrs)
+
     def _spawn_fit(self) -> None:
         self._next_version += 1
-        with obs.trace("refresh.gather", topology=self._topology):
-            fit = self._fit_closure(self._next_version)
-            records = self._root_records()
+        # the refresh trace opens here and is carried explicitly across
+        # the worker-thread boundary (gather on this thread, fit on the
+        # worker, install + root span back on the polling thread)
+        rec = obs.get_default_recorder()
+        tctx = rec.new_trace()
+        self._refresh_trace = (rec, tctx, time.perf_counter())
+        with obs.use_context(tctx):
+            with obs.trace("refresh.gather", topology=self._topology):
+                fit = self._fit_closure(self._next_version)
+                records = self._root_records()
         box: list = []
 
         def run():
-            try:
-                model, fit_s = self._timed_fit(fit)
-                box.append(("ok", model, fit_s, records))
-            except BaseException as e:  # surfaced on the caller at poll/join
-                box.append(("err", e, 0.0, 0))
+            with obs.use_context(tctx):
+                try:
+                    model, fit_s = self._timed_fit(fit)
+                    box.append(("ok", model, fit_s, records))
+                except BaseException as e:  # surfaced at poll/join
+                    box.append(("err", e, 0.0, 0))
 
         self._worker_box = box
         self._worker = threading.Thread(
@@ -325,8 +368,12 @@ class ServingFrontEnd:
         self._worker, self._worker_box = None, []
         if status == "err":
             self._backlog = False   # don't respawn on top of a failed fit
+            self._end_refresh_trace("error", payload)
             raise payload
-        self._install(payload, fit_s, records)
+        _, tctx, _ = self._refresh_trace
+        with obs.use_context(tctx):
+            self._install(payload, fit_s, records)
+        self._end_refresh_trace()
         if self._backlog:
             self._backlog = False
             self._spawn_fit()
@@ -419,6 +466,10 @@ class ServingFrontEnd:
                             outlier_score=float(score[j]),
                             is_outlier=bool(score[j] > 1.0), latency_s=lat))
                     i += r
+        if out:
+            self._monitors.observe_scores(
+                self._topology, len(out),
+                sum(1 for r in out if r.is_outlier))
         return out
 
     def score(self, points) -> list[QueryResult]:

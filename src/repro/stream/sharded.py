@@ -193,7 +193,12 @@ class ShardedStreamService(ServingFrontEnd):
             raise RuntimeError("refresh() before any point was ingested")
         # one static row count for every site: the all_gather payload shape
         rows = _bucket(max(max(recs), 1))
-        roots = [tr.packed_root(rows) for tr in self.trees]
+        # per-site gather spans: inside refresh.gather, so one refresh
+        # trace stitches every site's root snapshot under a single root
+        roots = []
+        for i, tr in enumerate(self.trees):
+            with obs.trace("refresh.site_root", topology="sharded", site=i):
+                roots.append(tr.packed_root(rows))
         pts = np.stack([r[0] for r in roots])          # (s, rows, d)
         wts = np.stack([r[1] for r in roots])          # (s, rows)
         val = np.stack([r[2] for r in roots])          # (s, rows)

@@ -76,7 +76,7 @@ def test_snapshot_golden_schema():
     reg.histogram("h", buckets=(0.1,)).observe(0.05)
     snap = reg.snapshot()
     assert snap == {
-        "version": 1,
+        "version": 2,
         "enabled": True,
         "counters": {"c{a=1}": 3},
         "gauges": {"g": 2.5},
@@ -85,6 +85,11 @@ def test_snapshot_golden_schema():
             "p50": 0.05, "p95": 0.05, "p99": pytest.approx(0.05),
             "buckets": {"0.1": 1, "+Inf": 1},
         }},
+        "alerts": [],
+        "trace": {
+            "enabled": True, "sample_rate": 1.0, "ring": 65536,
+            "recorded": 0, "buffered": 0, "dropped": 0, "traces": 0,
+        },
     }
     json.dumps(snap)   # JSON-serializable as-is
 
