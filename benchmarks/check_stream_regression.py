@@ -50,6 +50,16 @@ demands it sheds ~nothing below capacity, and the section's
 these gates unless ``--require-serving`` is passed (the serve-load CI
 lane does).
 
+The ``store_*`` keys gate the ``"store"`` section (the tiered summary
+store's long-stream comparison, ``stream_bench.py --store``):
+``store_max_ingest_slowdown_frac`` bounds the tiered-vs-plain ingest
+slowdown, ``store_max_rss_growth_frac`` bounds resident-set growth over
+the second half of the tiered run (the bounded-memory claim), and the
+section's ``bit_identical`` / ``refresh_skipped`` flags must be true
+with nonzero spill/page-in tallies.  A bench without the section skips
+these gates unless ``--require-store`` is passed (the nightly
+long-stream-smoke lane does).
+
 With any ``summarize_*`` key present the gate also reads
 ``BENCH_summarize.json`` (benchmarks/summarizer_bench.py) and checks, per
 gated dataset (gauss / kdd_like):
@@ -229,6 +239,67 @@ def check_serving(bench: dict, thr: dict, *,
     return failures
 
 
+def check_store(bench: dict, thr: dict, *,
+                require_store: bool = False) -> list[str]:
+    """Gate the ``"store"`` section (stream_bench.py --store).
+
+    Optional in a plain bench run; ``--require-store`` (the nightly
+    long-stream-smoke lane) makes its absence a failure.  Gates: the
+    tiered tree's packed root must be bit-identical to the in-memory
+    tree's, ingest slowdown under the tier is bounded, resident-set
+    growth over the second half of the long stream is bounded (the
+    bounded-memory claim), the tier actually engaged (spills and
+    page-ins both nonzero), and an unchanged-root refresh skipped the
+    second-level fit.
+    """
+    failures: list[str] = []
+    st = bench.get("store")
+    if st is None:
+        if require_store:
+            print("FAIL store: section missing from bench output "
+                  "(run benchmarks/stream_bench.py --store)")
+            return ["store_section"]
+        if any(key.startswith("store_") for key in thr):
+            print("note store: section absent, store gates skipped")
+        return failures
+
+    def gate_max(name, value, bound):
+        tag = "ok  " if value <= bound else "FAIL"
+        print(f"{tag} {name}: {value:.4f} (max {bound})")
+        if value > bound:
+            failures.append(name)
+
+    if "store_max_ingest_slowdown_frac" in thr:
+        gate_max("store.ingest_slowdown_frac",
+                 float(st["ingest_slowdown_frac"]),
+                 thr["store_max_ingest_slowdown_frac"])
+    if "store_max_rss_growth_frac" in thr:
+        growth = st.get("rss_growth_frac")
+        if growth is None:
+            if require_store:
+                print("FAIL store.rss_growth_frac: unmeasured "
+                      "(no /proc/self/status on this platform)")
+                failures.append("store.rss_growth_frac")
+            else:
+                print("note store.rss_growth_frac: unmeasured, skipped")
+        else:
+            gate_max("store.rss_growth_frac", float(growth),
+                     thr["store_max_rss_growth_frac"])
+    for flag in ("bit_identical", "refresh_skipped"):
+        if st.get(flag) is not True:
+            print(f"FAIL store.{flag}: tiered run broke the contract")
+            failures.append(f"store.{flag}")
+        else:
+            print(f"ok   store.{flag}")
+    for tally in ("spills", "page_ins"):
+        v = int(st.get(tally, 0))
+        tag = "ok  " if v > 0 else "FAIL"
+        print(f"{tag} store.{tally}: {v} (min 1 — the tier must engage)")
+        if v <= 0:
+            failures.append(f"store.{tally}")
+    return failures
+
+
 _SUMMARIZE_DATASETS = ("gauss", "kdd_like")
 
 
@@ -292,6 +363,9 @@ def main() -> int:
                     help="fail if the bench has no 'serving' section "
                          "(the serve-load CI lane sets this; a plain "
                          "bench-smoke run may legitimately omit it)")
+    ap.add_argument("--require-store", action="store_true",
+                    help="fail if the bench has no 'store' section "
+                         "(the nightly long-stream-smoke lane sets this)")
     args = ap.parse_args()
     bench = json.loads(Path(args.bench).read_text())
     thr = json.loads(Path(args.thresholds).read_text())
@@ -301,6 +375,7 @@ def main() -> int:
     failures = (check(bench, thr)
                 + check_serving(bench, thr,
                                 require_serving=args.require_serving)
+                + check_store(bench, thr, require_store=args.require_store)
                 + check_summarize(summarize_bench, thr))
     if failures:
         print(f"regression gate FAILED: {', '.join(failures)}",

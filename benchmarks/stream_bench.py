@@ -45,6 +45,12 @@ ingest throughput with metrics enabled vs disabled
 (``repro.obs.set_metrics_enabled``); the regression gate holds the
 overhead fraction <= ``obs_overhead_frac_max`` (5%).
 
+With ``--store [--points N]`` the result gains a ``"store"`` section —
+the tiered summary store's long-stream contract (bit-identical
+``packed_root``, bounded ingest slowdown and RSS growth, skip-refresh on
+an unchanged root); the nightly ``long-stream-smoke`` CI lane runs it at
+2e6 points and gates it with ``--require-store``.
+
 Emits ``BENCH_stream.json`` at the repo root so runs are comparable
 across PRs, and CSV lines via ``benchmarks/run.py --only stream``.
 
@@ -265,6 +271,97 @@ def kernel_bench(*, n: int = 32768, m: int = 64, d: int = 8,
     return out
 
 
+def _rss_bytes() -> int | None:
+    """Resident set size from /proc (None off Linux)."""
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) * 1024
+    except (OSError, ValueError, IndexError):
+        pass
+    return None
+
+
+def store_section(*, points: int, seed: int, policy: KernelPolicy) -> dict:
+    """Tiered summary store vs the in-memory tree on one long stream.
+
+    Streams ``points`` rows through two otherwise-identical windowed
+    services — one plain, one under a ``hot_levels=1`` tiered store (every
+    deeper level spilled, demand-paged back on merges) — and reports the
+    gated contract: ``packed_root`` bit-identical, ingest slowdown within
+    ``store_max_ingest_slowdown_frac``, resident-set growth over the
+    second half of the tiered run within ``store_max_rss_growth_frac``,
+    and an unchanged-root refresh actually skipping the second-level fit.
+    Movement tallies (spills / page-ins / bytes) land on the trend line.
+    """
+    from repro import obs
+    from repro.store.spec import StoreSpec
+
+    k, d = 20, 5
+    t = max(points // 100, 40)
+    x, _ = gauss(n_centers=k, per_center=max(points // k, 50), d=d,
+                 sigma=0.1, t=t, seed=seed)
+    n = x.shape[0]
+    batch = 8192
+    base = dict(dim=d, k=k, t=t, leaf_size=2048,
+                refresh_every=max(n // 4, batch), micro_batch=256,
+                window=max(n // 2, batch), policy=policy, seed=seed)
+    spec = StoreSpec(hot_levels=1)
+
+    warm = StreamService(ServiceConfig(**base))   # jit caches, off the clock
+    warm.ingest(x[:base["refresh_every"]])
+    del warm
+
+    def ingest_run(store):
+        svc = StreamService(ServiceConfig(**base, store=store))
+        rss_mid = None
+        t0 = time.perf_counter()
+        for i in range(0, n, batch):
+            svc.ingest(x[i:i + batch])
+            if rss_mid is None and i + batch >= n // 2:
+                rss_mid = _rss_bytes()
+        return svc, time.perf_counter() - t0, rss_mid, _rss_bytes()
+
+    plain, wall_plain, _, _ = ingest_run(None)
+    tiered, wall_tiered, rss_mid, rss_end = ingest_run(spec)
+
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(plain.tree.packed_root(), tiered.tree.packed_root()))
+
+    m1 = tiered.refresh()
+    m2 = tiered.refresh()           # root unchanged: must skip the fit
+    skipped = int(m2.version) == int(m1.version)
+    counters = obs.snapshot().get("counters", {})
+    skipped_total = sum(v for key, v in counters.items()
+                        if key.startswith("refresh.skipped{"))
+    st = tiered.tree.store.stats()
+    cold = sum(1 for nd in tiered.tree.nodes if nd.summary is None)
+    growth = (None if rss_mid in (None, 0) or rss_end is None
+              else (rss_end - rss_mid) / rss_mid)
+    return {
+        "points": n,
+        "window": base["window"],
+        "hot_levels": spec.hot_levels,
+        "ingest_pts_per_s_plain": round(n / wall_plain, 1),
+        "ingest_pts_per_s_tiered": round(n / wall_tiered, 1),
+        "ingest_slowdown_frac": round(wall_tiered / wall_plain - 1.0, 4),
+        "rss_mid_bytes": rss_mid,
+        "rss_end_bytes": rss_end,
+        "rss_growth_frac": None if growth is None else round(growth, 4),
+        "spills": int(st["spills"]),
+        "page_ins": int(st["page_ins"]),
+        "spill_bytes": int(st["spill_bytes"]),
+        "page_in_bytes": int(st["page_in_bytes"]),
+        "cold_nodes": cold,
+        "hot_nodes": len(tiered.tree.nodes) - cold,
+        "bit_identical": bool(bit_identical),
+        "refresh_skipped": bool(skipped),
+        "skipped_refreshes": int(skipped_total),
+    }
+
+
 def obs_overhead(x, cfg: ServiceConfig, *, repeats: int = 3) -> dict:
     """Instrumentation cost on the ingest hot path: best-of-``repeats``
     ingest throughput at three settings (same data, same config, fresh
@@ -312,6 +409,8 @@ def run(scale: float = 1.0, seed: int = 0,
         policy: KernelPolicy = KernelPolicy(),
         sites: int = 0,
         serving: str | None = None,
+        store: bool = False,
+        points: int = 1_000_000,
         out_path: Path | str | None = _DEFAULT_OUT) -> dict:
     k, d = 20, 5
     per_center = max(int(2500 * scale), 200)
@@ -388,6 +487,9 @@ def run(scale: float = 1.0, seed: int = 0,
     if serving is not None:
         from serving_bench import serving_section
         result["serving"] = serving_section(mode=serving, seed=seed)
+    if store:
+        result["store"] = store_section(points=points, seed=seed,
+                                        policy=policy)
     if out_path is not None:
         Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
     return result
@@ -407,11 +509,19 @@ def main() -> None:
     ap.add_argument("--serving", choices=["smoke", "full"], default=None,
                     help="also run the async serving-scheduler load ladder "
                          "(see serving_bench.py) into a 'serving' section")
+    ap.add_argument("--store", action="store_true",
+                    help="also run the tiered-store long-stream comparison "
+                         "(bit-identity, RSS growth, ingest slowdown, "
+                         "skip-refresh) into a 'store' section")
+    ap.add_argument("--points", type=float, default=1e6,
+                    help="stream length for the --store section "
+                         "(accepts 2e6-style floats)")
     ap.add_argument("--out", default=str(_DEFAULT_OUT))
     args = ap.parse_args()
     res = run(scale=args.scale, seed=args.seed,
               policy=KernelPolicy(backend=args.backend, autotune=args.autotune),
-              sites=args.sites, serving=args.serving, out_path=args.out)
+              sites=args.sites, serving=args.serving,
+              store=args.store, points=int(args.points), out_path=args.out)
     print(f"n={res['n']} (k={res['k']}, t={res['t']})")
     print(f"ingest : {res['ingest_pts_per_s']:,.0f} pts/s "
           f"({res['ingest_s']:.2f}s incl. cadence refreshes)")
@@ -456,6 +566,19 @@ def main() -> None:
     if "serving" in res:
         from serving_bench import report as serving_report
         serving_report(res["serving"])
+    if "store" in res:
+        so = res["store"]
+        grw = ("n/a" if so["rss_growth_frac"] is None
+               else f"{100 * so['rss_growth_frac']:.1f}%")
+        print(f"store  : {so['points']:,} pts under hot_levels="
+              f"{so['hot_levels']}: tiered "
+              f"{so['ingest_pts_per_s_tiered']:,.0f} pts/s vs plain "
+              f"{so['ingest_pts_per_s_plain']:,.0f} "
+              f"(slowdown {100 * so['ingest_slowdown_frac']:.1f}%)")
+        print(f"  {so['spills']} spills ({so['spill_bytes']:,} B out), "
+              f"{so['page_ins']} page-ins, rss growth {grw}, "
+              f"root bit-identical: {so['bit_identical']}, "
+              f"refresh skipped: {so['refresh_skipped']}")
     print(f"wrote {args.out}")
 
 

@@ -18,7 +18,9 @@ Each line:
      "stream": {ingest_pts_per_s, query_p50_ms, query_p99_ms, cost_ratio,
                 obs_overhead_frac?, sharded_cost_ratio?,
                 sharded_comm_bytes?, serving_peak_goodput_rps?,
-                serving_overload_p99_ms?, serving_overload_shed_rate?},
+                serving_overload_p99_ms?, serving_overload_shed_rate?,
+                store_spill_bytes?, store_skipped_refreshes?,
+                store_ingest_slowdown_frac?, store_rss_growth_frac?},
      "kernels": {"<op>.<backend>": pts_per_s, ...},
      "summarize": {"<dataset>.<name>": {"recall": .., "l2_ratio": ..}, ...}}
 """
@@ -80,6 +82,15 @@ def stream_point(bench: dict) -> dict:
                 float(sv["overload_p99_ms"]), 3)
         pt["serving_overload_shed_rate"] = round(
             float(sv["overload_shed_rate"]), 4)
+    so = bench.get("store")
+    if so:
+        pt["store_spill_bytes"] = int(so["spill_bytes"])
+        pt["store_skipped_refreshes"] = int(so.get("skipped_refreshes", 0))
+        pt["store_ingest_slowdown_frac"] = round(
+            float(so["ingest_slowdown_frac"]), 4)
+        if so.get("rss_growth_frac") is not None:
+            pt["store_rss_growth_frac"] = round(
+                float(so["rss_growth_frac"]), 4)
     return pt
 
 

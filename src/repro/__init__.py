@@ -15,8 +15,10 @@ the contract (CI asserts every name resolves).  Four groups:
   tree, k-means--, and the coordinator entry points.
 * **serving + persistence** — the stream services, their configs, the
   model/result records, the async serving layer (``ServingSpec`` knobs,
-  ``ServingScheduler``, typed ``ShedReject`` — ``repro.serve``) and the
-  checkpoint manager.
+  ``ServingScheduler``, typed ``ShedReject`` — ``repro.serve``), the
+  checkpoint manager, and the tiered summary store (``StoreSpec`` policy
+  / ``TieredStore`` engine — bounded-memory streaming with async spill,
+  demand paging and incremental refresh, ``repro.store``).
 * **observability** — the process metrics registry (``repro.obs``):
   ``Session.stats()`` snapshots it, ``trace``/``counter``/``gauge``/
   ``histogram`` feed it, ``render_prometheus`` formats it for scraping,
@@ -33,8 +35,9 @@ below are the stable cross-PR surface.
 """
 from repro.api import (
     PipelineConfig, ProblemSpec, Session, TOPOLOGIES, TopologySpec,
-    pipeline_config,
+    pipeline_config, register_config_migration,
 )
+from repro.store import StoreSpec, TieredStore
 from repro.kernels.dispatch import (
     KernelPolicy, get_default_policy, set_default_policy, using_policy,
 )
@@ -64,7 +67,9 @@ from repro.obs import (
 __all__ = [
     # config + session
     "PipelineConfig", "ProblemSpec", "TopologySpec", "TOPOLOGIES",
-    "pipeline_config", "Session",
+    "pipeline_config", "Session", "register_config_migration",
+    # tiered summary store
+    "StoreSpec", "TieredStore",
     # policies
     "KernelPolicy", "get_default_policy", "set_default_policy",
     "using_policy",

@@ -15,9 +15,10 @@ executes a config file.
 """
 from repro.api.config import (  # noqa: F401
     PARTITIONS, PipelineConfig, ProblemSpec, SITE_BUDGETS, TOPOLOGIES,
-    TopologySpec, pipeline_config,
+    TopologySpec, pipeline_config, register_config_migration,
 )
 from repro.obs.tracing import TraceSpec  # noqa: F401
+from repro.store import StoreSpec, TieredStore  # noqa: F401
 from repro.api.session import OneshotEngine, Session  # noqa: F401
 from repro.serve import (  # noqa: F401
     ScoreTicket, ServingScheduler, ServingSpec, ShedReject,

@@ -23,7 +23,9 @@ Subcommands:
                     report latency, optionally ``--checkpoint``; with
                     ``--clients N`` it then saturates the async serving
                     scheduler (``repro.serve``) with N open-loop client
-                    threads and reports goodput / shed rate / p99;
+                    threads and reports goodput / shed rate / p99; configs
+                    with a ``store`` section additionally report tiered
+                    spill / page-in and skipped-refresh activity;
 * ``bench-score`` — fit, then measure the query path (p50/p99 latency and
                     throughput over ``--repeat`` rounds of ``--queries``);
 * ``stats``       — fit + score like ``run``, then emit the full metrics
@@ -76,7 +78,8 @@ def load_config_file(path) -> tuple[PipelineConfig, dict]:
     if "pipeline" in raw:
         pipeline = PipelineConfig.from_dict(raw["pipeline"])
         data = raw.get("data", {})
-        unknown = set(raw) - {"pipeline", "data"}
+        unknown = {k for k in raw if not k.startswith("$")} - {"pipeline",
+                                                               "data"}
         if unknown:
             raise SystemExit(f"{path}: unknown top-level keys "
                              f"{sorted(unknown)}")
@@ -207,6 +210,26 @@ class _MetricsEmitter:
             self._fh.close()
 
 
+def _report_store(session) -> None:
+    """One line of tiered-store + incremental-refresh activity, printed
+    only when the config has a store section (quiet otherwise)."""
+    if session.config.store is None:
+        return
+    counters = session.stats().get("counters", {})
+    skipped = sum(v for k, v in counters.items()
+                  if k.startswith("refresh.skipped{"))
+    warm = sum(v for k, v in counters.items()
+               if k.startswith("refresh.warm_starts{"))
+    st = session.store_stats()
+    if st is not None:
+        print(f"  store: {st['spills']} spills "
+              f"({st['spill_bytes'] / 2**20:.2f} MiB out), "
+              f"{st['page_ins']} page-ins "
+              f"({st['page_in_bytes'] / 2**20:.2f} MiB back)")
+    print(f"  refresh: {int(skipped)} skipped (root unchanged), "
+          f"{int(warm)} warm-started")
+
+
 def cmd_serve(args) -> None:
     pipeline, data_spec = load_config_file(args.config)
     if pipeline.topology.kind == "oneshot":
@@ -233,6 +256,7 @@ def cmd_serve(args) -> None:
     stats = session.latency_stats()
     print(f"  query latency: p50 {stats['p50_ms']:.2f} ms, "
           f"p99 {stats['p99_ms']:.2f} ms over {stats['count']} requests")
+    _report_store(session)
     if args.clients:
         _serve_load_phase(session, x, args)
         emitter.emit(session)

@@ -36,13 +36,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional
+import warnings
+from typing import Callable, Optional
 
 from repro.kernels.dispatch import (KernelPolicy, get_default_policy,
                                     BACKENDS)
 from repro.kernels.pdist.ref import METRICS
 from repro.obs.tracing import TraceSpec
 from repro.serve.spec import SHED_POLICIES, ServingSpec
+from repro.store.spec import StoreSpec
 from repro.stream.service import ServiceConfig
 from repro.stream.sharded import ShardedServiceConfig
 from repro.summarize.base import (SummarizerPolicy, get_default_summarizer,
@@ -52,7 +54,36 @@ TOPOLOGIES = ("oneshot", "stream", "sharded")
 PARTITIONS = ("random", "adversarial")
 SITE_BUDGETS = ("full", "paper")
 
-_CONFIG_VERSION = 1
+_CONFIG_VERSION = 2
+
+# version N -> migration upgrading a version-N payload dict to N+1; the
+# from_dict loop walks these until the payload reaches _CONFIG_VERSION.
+# A version with no registered migration (older than any we still read,
+# or newer than this build) is a hard error, exactly as before.
+_MIGRATIONS: dict[int, Callable[[dict], dict]] = {}
+
+
+def register_config_migration(from_version: int):
+    """Decorator registering ``fn(payload) -> payload`` that upgrades a
+    version-``from_version`` config payload (the ``to_dict`` image minus
+    the ``version`` key) to version ``from_version + 1``.  Migrations
+    chain: a v1 artifact read by a v3 build runs v1->v2 then v2->v3."""
+    def deco(fn: Callable[[dict], dict]) -> Callable[[dict], dict]:
+        _MIGRATIONS[from_version] = fn
+        return fn
+    return deco
+
+
+@register_config_migration(1)
+def _migrate_v1_to_v2(d: dict) -> dict:
+    # v2 added the optional "store" section (tiered summary store +
+    # incremental refresh).  A v1 payload is already a valid v2 payload —
+    # absent "store" means no store, same semantics the v1 build had.
+    warnings.warn(
+        "reading a version-1 pipeline config; upgrading to version 2 "
+        "(re-serialize with to_dict()/to_json() to persist the upgrade)",
+        UserWarning, stacklevel=4)
+    return d
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -165,6 +196,11 @@ class PipelineConfig:
     # to pin sampling / ring size in the artifact — applied to the
     # telemetry plane when a Session is constructed from this config
     tracing: Optional[TraceSpec] = None
+    # None = keep every tree level resident and refit on every refresh
+    # (the pre-v2 behavior, bit for bit); set a StoreSpec to bound hot
+    # memory (spill cold levels, demand-page them back) and/or skip /
+    # warm-start refreshes whose root did not change (stream/sharded only)
+    store: Optional[StoreSpec] = None
 
     def __post_init__(self):
         _require(isinstance(self.problem, ProblemSpec),
@@ -179,6 +215,13 @@ class PipelineConfig:
                  or isinstance(self.tracing, TraceSpec),
                  f"tracing must be a TraceSpec or None, "
                  f"got {self.tracing!r}")
+        _require(self.store is None or isinstance(self.store, StoreSpec),
+                 f"store must be a StoreSpec or None, got {self.store!r}")
+        if self.store is not None:
+            _require(self.topology.kind != "oneshot",
+                     "store is a stream/sharded knob: a oneshot run keeps "
+                     "no tree to tier and refits from raw points every "
+                     "time, so a store section would be silently inert")
         if self.summarizer is None:
             object.__setattr__(self, "summarizer", get_default_summarizer())
         if self.kernels is None:
@@ -221,19 +264,32 @@ class PipelineConfig:
             d["serving"] = dataclasses.asdict(self.serving)
         if self.tracing is not None:
             d["tracing"] = dataclasses.asdict(self.tracing)
+        if self.store is not None:
+            d["store"] = dataclasses.asdict(self.store)
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "PipelineConfig":
-        """Inverse of :meth:`to_dict`; unknown or missing keys raise."""
+        """Inverse of :meth:`to_dict`; unknown or missing keys raise.
+
+        Older serialized configs are upgraded in place through the
+        registered migration chain (with a warning per hop); a version
+        with no migration path to this build's still raises."""
         if not isinstance(d, dict):
             raise ValueError(f"expected a config dict, got {type(d).__name__}")
         d = dict(d)
         version = d.pop("version", _CONFIG_VERSION)
-        if version != _CONFIG_VERSION:
-            raise ValueError(
-                f"config version {version!r} is not supported "
-                f"(this build reads version {_CONFIG_VERSION})")
+        while version != _CONFIG_VERSION:
+            migrate = _MIGRATIONS.get(version)
+            if migrate is None:
+                raise ValueError(
+                    f"config version {version!r} is not supported "
+                    f"(this build reads version {_CONFIG_VERSION}"
+                    + (f"; migrations exist from versions "
+                       f"{sorted(_MIGRATIONS)}" if _MIGRATIONS else "")
+                    + ")")
+            d = migrate(dict(d))
+            version += 1
         try:
             problem = d.pop("problem")
             topology = d.pop("topology", {})
@@ -243,12 +299,13 @@ class PipelineConfig:
             seed = d.pop("seed", 0)
             serving = d.pop("serving", None)
             tracing = d.pop("tracing", None)
+            store = d.pop("store", None)
         except KeyError as e:
             raise ValueError(f"config is missing required section {e}")
         if d:
             raise ValueError(f"unknown config keys {sorted(d)}; expected "
                              f"problem/topology/summarizer/kernels/"
-                             f"second_iters/seed/serving/tracing")
+                             f"second_iters/seed/serving/tracing/store")
         return cls(
             problem=_spec_from(ProblemSpec, "problem", problem),
             topology=_spec_from(TopologySpec, "topology", topology),
@@ -258,6 +315,7 @@ class PipelineConfig:
             seed=seed,
             serving=_serving_from(serving),
             tracing=_tracing_from(tracing),
+            store=_store_from(store),
         )
 
     def to_json(self, *, indent: int = 2) -> str:
@@ -295,7 +353,7 @@ class PipelineConfig:
             micro_batch=topo.micro_batch, second_iters=self.second_iters,
             policy=self.kernels, summarizer=self.summarizer,
             window=topo.window, async_refresh=topo.async_refresh,
-            seed=self.seed)
+            seed=self.seed, store=self.store)
 
 
 def _spec_from(cls, section: str, d) -> object:
@@ -340,6 +398,19 @@ def _serving_from(d) -> Optional[ServingSpec]:
     return _spec_from(ServingSpec, "serving", d)
 
 
+def _store_from(d) -> Optional[StoreSpec]:
+    if d is None or isinstance(d, StoreSpec):
+        return d
+    if isinstance(d, bool):
+        # bare flag: store=True enables incremental refresh with no
+        # tiering (everything stays resident); store=False is no store
+        return StoreSpec() if d else None
+    if isinstance(d, int):
+        # bare int: hot-level budget with the other knobs defaulted
+        return StoreSpec(hot_levels=d)
+    return _spec_from(StoreSpec, "store", d)
+
+
 def _tracing_from(d) -> Optional[TraceSpec]:
     if d is None or isinstance(d, TraceSpec):
         return d
@@ -378,6 +449,7 @@ def pipeline_config(
     seed: int = 0,
     serving=None,
     tracing=None,
+    store=None,
     **topology_kwargs,
 ) -> PipelineConfig:
     """Flat-keyword constructor — the ergonomic front door.
@@ -389,10 +461,13 @@ def pipeline_config(
     a :class:`repro.serve.ServingSpec`, a ``{queue_bound, ...}`` dict, or
     a bare shed policy name (``serving="wait"``); ``tracing`` accepts a
     :class:`repro.obs.TraceSpec`, a ``{sample_rate, ...}`` dict, a bare
-    sampling rate (``tracing=0.1``) or flag (``tracing=False``).
+    sampling rate (``tracing=0.1``) or flag (``tracing=False``);
+    ``store`` accepts a :class:`repro.store.StoreSpec`, a
+    ``{hot_levels, ...}`` dict, a bare hot-level budget (``store=2``) or
+    flag (``store=True`` = incremental refresh without tiering).
 
         cfg = pipeline_config(dim=5, k=20, t=500, topology="sharded",
-                              sites=4, window=100_000)
+                              sites=4, window=100_000, store=2)
     """
     return PipelineConfig(
         problem=ProblemSpec(dim=dim, k=k, t=t, metric=metric),
@@ -404,4 +479,5 @@ def pipeline_config(
         seed=seed,
         serving=_serving_from(serving),
         tracing=_tracing_from(tracing),
+        store=_store_from(store),
     )

@@ -368,6 +368,26 @@ class Session:
     def latency_stats(self) -> dict:
         return self.engine.latency_stats()
 
+    def store_stats(self) -> Optional[dict]:
+        """Aggregate tiered-store movement tallies across this session's
+        trees — ``{"spills", "page_ins", "spill_bytes", "page_in_bytes"}``
+        summed over sites — or None when the config has no tiered store
+        (oneshot topology, no ``store`` section, or an untiered spec).
+        Per-series detail lives in :meth:`stats` under ``store.*``."""
+        trees = []
+        if hasattr(self.engine, "tree"):
+            trees = [self.engine.tree]
+        elif hasattr(self.engine, "trees"):
+            trees = list(self.engine.trees)
+        stores = [t._store for t in trees if t._store is not None]
+        if not stores:
+            return None
+        totals: dict = {}
+        for s in stores:
+            for k, v in s.stats().items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
     def stats(self) -> dict:
         """The process metrics snapshot (``repro.obs``): one plain dict of
         every counter, gauge and latency/phase histogram the layers under

@@ -10,7 +10,9 @@ Fault-tolerance properties:
   * atomic publish — a crashed writer never leaves a readable-but-corrupt
     checkpoint (readers only ever see fully-renamed directories);
   * async — save() returns immediately; the writer thread serializes
-    device->host transfer + IO off the training path; wait() joins;
+    device->host transfer + IO off the training path; wait() joins, and a
+    writer-thread exception is captured and re-raised on the next
+    wait()/save()/restore() instead of dying silently with the daemon;
   * integrity — crc32 per leaf, verified on restore;
   * cross-mesh restore — leaves are stored unsharded and re-placed with
     jax.device_put(leaf, sharding) for whatever mesh the restorer passes,
@@ -49,6 +51,7 @@ class CheckpointManager:
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep_last = keep_last
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
 
     # ------------------------------------------------------------ save
     def save(self, step: int, tree, *, blocking: bool = False, meta=None):
@@ -77,42 +80,62 @@ class CheckpointManager:
             # runs on the writer thread for async saves — the registry is
             # mutation-thread-safe, so recording from here is fine
             with obs.trace("checkpoint.save"):
-                tmp = self.root / f"step_{step:09d}.tmp"
-                final = self.root / f"step_{step:09d}"
-                if tmp.exists():
-                    shutil.rmtree(tmp)
-                tmp.mkdir(parents=True)
-                manifest = {"step": step, "treedef": str(treedef),
-                            "meta": meta or {}, "leaves": []}
-                for i, arr in enumerate(host_leaves):
-                    name = f"arr_{i:05d}.npy"
-                    np.save(tmp / name, arr)
-                    manifest["leaves"].append({
-                        "file": name,
-                        "shape": list(arr.shape),
-                        "dtype": str(arr.dtype),
-                        "crc32": zlib.crc32(
-                            np.ascontiguousarray(arr).tobytes()),
-                    })
-                (tmp / "manifest.json").write_text(json.dumps(manifest))
-                if final.exists():
-                    shutil.rmtree(final)
-                os.rename(tmp, final)  # atomic publish
-                self._prune()
+                self._do_write(step, treedef, meta, host_leaves)
             obs.counter("checkpoint.saves").inc()
             obs.counter("checkpoint.bytes_written").inc(
                 sum(arr.nbytes for arr in host_leaves))
 
+        def _write_guarded():
+            # an exception on the daemon writer thread would otherwise die
+            # silently; park it for the next wait()/save()/restore() to
+            # re-raise on a caller thread
+            try:
+                _write()
+            except BaseException as e:
+                self._error = e
+
         if blocking:
             _write()
         else:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread = threading.Thread(target=_write_guarded, daemon=True)
             self._thread.start()
 
+    def _do_write(self, step, treedef, meta, host_leaves):
+        tmp = self.root / f"step_{step:09d}.tmp"
+        final = self.root / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "treedef": str(treedef),
+                    "meta": meta or {}, "leaves": []}
+        for i, arr in enumerate(host_leaves):
+            name = f"arr_{i:05d}.npy"
+            np.save(tmp / name, arr)
+            manifest["leaves"].append({
+                "file": name,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(
+                    np.ascontiguousarray(arr).tobytes()),
+            })
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._prune()
+
     def wait(self):
+        """Join any in-flight async save.  Re-raises an exception the writer
+        thread hit (here, on the caller's thread) — the failed step was never
+        published, so the caller sees both the error and a consistent
+        directory.  save()/restore()/read_meta() all wait first, so a lost
+        write cannot be silently followed by dependent work."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _prune(self):
         steps = self.all_steps()

@@ -54,13 +54,28 @@ def kmeans_minus_minus(
     iters: int = 25,
     metric: str = "l2sq",
     policy: Optional[KernelPolicy] = None,
+    init_centers: Optional[jnp.ndarray] = None,
     block_n: Optional[int] = None,      # removed alias: raises TypeError
     use_pallas: Optional[bool] = None,  # removed alias: raises TypeError
 ) -> OutlierClustering:
+    """``init_centers`` (k, d): warm-start the Lloyd loop from these
+    centers instead of k-means++ seeding (``key`` is then unused) — the
+    incremental-refresh path re-fits from the previous model when little
+    of the root changed.  ``None`` (default) seeds as usual and is
+    bit-identical to every prior release."""
     policy = resolve_policy(policy, use_pallas=use_pallas, block_n=block_n,
                             caller="kmeans_minus_minus")
-    return _kmeans_minus_minus(points, weights, valid, key, k=k, t=t,
-                               iters=iters, metric=metric, policy=policy)
+    if init_centers is None:
+        return _kmeans_minus_minus(points, weights, valid, key, k=k, t=t,
+                                   iters=iters, metric=metric, policy=policy)
+    init_centers = jnp.asarray(init_centers, jnp.float32)
+    if init_centers.shape != (k, points.shape[1]):
+        raise ValueError(
+            f"init_centers must have shape ({k}, {points.shape[1]}), "
+            f"got {tuple(init_centers.shape)}")
+    return _kmeans_minus_minus_warm(points, weights, valid, init_centers,
+                                    t=t, iters=iters, metric=metric,
+                                    policy=policy)
 
 
 @functools.partial(jax.jit,
@@ -77,10 +92,37 @@ def _kmeans_minus_minus(
     metric: str,
     policy: KernelPolicy,
 ) -> OutlierClustering:
-    n, d = points.shape
     w = weights.astype(jnp.float32) * valid
     seed_idx, _ = kmeanspp_seed(points, w, key, budget=k, metric=metric)
     centers0 = points[seed_idx]
+    return _lloyd_outlier_loop(points, w, valid, centers0, k=k, t=t,
+                               iters=iters, metric=metric, policy=policy)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("iters", "metric", "policy"))
+def _kmeans_minus_minus_warm(
+    points: jnp.ndarray,
+    weights: jnp.ndarray,
+    valid: jnp.ndarray,
+    centers0: jnp.ndarray,
+    *,
+    t: float,
+    iters: int,
+    metric: str,
+    policy: KernelPolicy,
+) -> OutlierClustering:
+    w = weights.astype(jnp.float32) * valid
+    return _lloyd_outlier_loop(points, w, valid, centers0,
+                               k=centers0.shape[0], t=t, iters=iters,
+                               metric=metric, policy=policy)
+
+
+def _lloyd_outlier_loop(points, w, valid, centers0, *, k, t, iters, metric,
+                        policy) -> OutlierClustering:
+    """The alternation after seeding — shared by the cold (k-means++
+    seeded) and warm (previous-centers) paths; traced inline, so the cold
+    path's compiled program is exactly the pre-refactor one."""
 
     def step(centers, _):
         # One registry-dispatched fused Lloyd step (assign + accumulate);

@@ -1,0 +1,12 @@
+"""Tiered summary store: bounded-memory streaming for the tree engines.
+
+``StoreSpec`` declares the policy (hot budget, spill directory,
+incremental-refresh behavior); ``TieredStore`` executes it (async spill
+through the checkpoint machinery, crc-verified demand paging, residency
+accounting).  See :mod:`repro.store.tiered` for the design notes and the
+bit-identity contract.
+"""
+from repro.store.spec import StoreSpec
+from repro.store.tiered import TieredStore, summary_nbytes
+
+__all__ = ["StoreSpec", "TieredStore", "summary_nbytes"]

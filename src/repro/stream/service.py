@@ -56,6 +56,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.kmeans_mm import kmeans_minus_minus
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
 from repro.kernels.score.ops import score as fused_score
+from repro.store.spec import StoreSpec
 from repro.stream.tree import StreamTree, TreeConfig
 from repro.summarize.base import SummarizerPolicy, get_default_summarizer
 
@@ -86,6 +87,12 @@ class BaseServiceConfig:
     window: Optional[int] = None
     async_refresh: bool = False      # fit cadence models off the ingest path
     seed: int = 0
+    # None = classic behavior (all-resident tree, every refresh refits).
+    # A StoreSpec adds disk tiering and/or incremental refresh; model keys
+    # are then derived from the tree's root epoch instead of the version,
+    # so an unchanged root provably refits to the identical model — which
+    # is what makes skipping it safe (see _fit_closure).
+    store: Optional[StoreSpec] = None
 
     def __post_init__(self):
         if self.policy is None:
@@ -101,7 +108,7 @@ class ServiceConfig(BaseServiceConfig):
             dim=self.dim, k=self.k, t=self.t, leaf_size=self.leaf_size,
             metric=self.metric, policy=self.policy,
             summarizer=self.summarizer,
-            window=self.window, seed=self.seed)
+            window=self.window, seed=self.seed, store=self.store)
 
 
 class ModelState(NamedTuple):
@@ -142,15 +149,17 @@ def _score_batch(x, centers, threshold, *, metric, policy):
 
 
 def fit_model(pts, wts, valid, key, version, *, k, t, iters, metric,
-              policy) -> ModelState:
+              policy, init_centers=None) -> ModelState:
     """Second-level weighted k-means-- on a (padded) root -> ModelState.
 
     Pure function of its inputs — the one coordinator step every serving
     path (single-host, sharded, sync or async refresh) funnels through.
+    ``init_centers`` warm-starts the Lloyd loop from the previous model's
+    centers (the incremental-refresh path); None seeds as always.
     """
     sol = kmeans_minus_minus(
         pts, wts, valid, key, k=k, t=float(t), iters=iters, metric=metric,
-        policy=policy)
+        policy=policy, init_centers=init_centers)
     inlier = valid & ~sol.outlier
     threshold = jnp.where(inlier, sol.distances, -jnp.inf).max()
     threshold = jnp.maximum(threshold, 1e-12).astype(jnp.float32)
@@ -199,6 +208,11 @@ class ServingFrontEnd:
         self._backlog = False
         self._next_version = 0
         self._since_refresh = 0
+        # incremental refresh: the root epoch(s) the serving model was fit
+        # on (None = no epoch-tracked fit yet) and the epoch of the fit in
+        # flight, handed from _fit_closure to _install
+        self._last_fit_epoch = None
+        self._pending_fit_epoch = None
         self.last_fit: Optional[FitStats] = None
         # (recorder, ctx, t_start) of the in-flight async refresh trace
         self._refresh_trace: tuple = (None, None, 0.0)
@@ -248,7 +262,9 @@ class ServingFrontEnd:
         self.refresh(blocking=not self.cfg.async_refresh)
 
     # ------------------------------------------------------------ refresh
-    def _fit_closure(self, version: int) -> Callable[[], ModelState]:
+    def _fit_closure(self, version: int) -> Optional[Callable[[], ModelState]]:
+        """Snapshot the root and return the deferred fit — or None to skip
+        (incremental refresh proved the installed model is already it)."""
         raise NotImplementedError
 
     def _root_records(self) -> int:
@@ -268,6 +284,9 @@ class ServingFrontEnd:
                  records: int) -> None:
         with obs.trace("refresh.install", topology=self._topology):
             self.model = model
+            if self._pending_fit_epoch is not None:
+                self._last_fit_epoch = self._pending_fit_epoch
+                self._pending_fit_epoch = None
             self.last_fit = FitStats(
                 version=int(model.version), records_folded=int(records),
                 fit_s=float(fit_s), installed_at=time.perf_counter())
@@ -295,6 +314,12 @@ class ServingFrontEnd:
         requested while one is already in flight is coalesced: it re-fires
         on the newest root as soon as the in-flight fit lands.  Either way
         the cadence counter restarts.
+
+        With ``cfg.store.incremental_refresh`` and an unchanged root since
+        the last fit, ``_fit_closure`` returns None and the refresh is
+        *skipped*: the serving model — provably bit-identical to what a
+        refit would install — stays, the version does not advance, and
+        the skip is counted (``refresh.skipped``).
         """
         if blocking:
             self.join_refresh()
@@ -304,6 +329,9 @@ class ServingFrontEnd:
                 with obs.trace("refresh.gather", topology=self._topology):
                     fit = self._fit_closure(self._next_version)
                     records = self._root_records()
+                if fit is None:
+                    self._skip_refresh()
+                    return self.model
                 model, fit_s = self._timed_fit(fit)
                 self._install(model, fit_s, records)
             self._since_refresh = 0
@@ -329,6 +357,14 @@ class ServingFrontEnd:
                         span_id=tctx.span_id, parent_id=None, status=status,
                         force=status == "error", attrs=attrs)
 
+    def _skip_refresh(self) -> None:
+        """Account an incremental-refresh skip: the root is unchanged, so
+        the installed model already equals what a refit would produce."""
+        self._next_version -= 1   # the skipped fit never claimed a version
+        self._pending_fit_epoch = None
+        obs.counter("refresh.skipped", topology=self._topology).inc()
+        self._since_refresh = 0
+
     def _spawn_fit(self) -> None:
         self._next_version += 1
         # the refresh trace opens here and is carried explicitly across
@@ -341,6 +377,10 @@ class ServingFrontEnd:
             with obs.trace("refresh.gather", topology=self._topology):
                 fit = self._fit_closure(self._next_version)
                 records = self._root_records()
+        if fit is None:
+            self._skip_refresh()
+            self._end_refresh_trace("skipped")
+            return
         box: list = []
 
         def run():
@@ -547,16 +587,45 @@ class StreamService(ServingFrontEnd):
         self._ingest_cadenced(x, w, self.tree.ingest)
 
     def _fit_closure(self, version: int):
-        """Snapshot the tree root now; fit later (possibly on a worker)."""
+        """Snapshot the tree root now; fit later (possibly on a worker).
+
+        With ``cfg.store`` set, the fit key is derived from the tree's
+        ``root_epoch`` instead of the model version: an unchanged root then
+        provably refits to the bit-identical model, which licenses both the
+        incremental-refresh *skip* (return None) and the opt-in warm start
+        from the previous centers when little of the root changed.
+        """
         cfg = self.cfg
         if self.tree.num_records == 0:
             raise RuntimeError("refresh() before any point was ingested")
+        store, init = cfg.store, None
+        if store is not None:
+            # touch the incremental-refresh series so a store-configured
+            # run always exposes them (at zero until the first skip)
+            obs.counter("refresh.skipped", topology=self._topology).inc(0)
+            obs.counter("refresh.warm_starts",
+                        topology=self._topology).inc(0)
+            epoch = self.tree.root_epoch
+            if (store.incremental_refresh and self.model is not None
+                    and epoch == self._last_fit_epoch):
+                return None
+            key = jax.random.fold_in(self._model_key, epoch)
+            if (store.warm_start_frac > 0.0 and self.model is not None
+                    and self._last_fit_epoch is not None):
+                changed, total = self.tree.changed_weight_since(
+                    self._last_fit_epoch)
+                if changed <= store.warm_start_frac * total:
+                    init = self.model.centers
+                    obs.counter("refresh.warm_starts",
+                                topology=self._topology).inc()
+            self._pending_fit_epoch = epoch
+        else:
+            key = jax.random.fold_in(self._model_key, version)
         pts, wts, valid = self.tree.packed_root()
-        key = jax.random.fold_in(self._model_key, version)
         return functools.partial(
             fit_model, jnp.asarray(pts), jnp.asarray(wts), jnp.asarray(valid),
             key, version, k=cfg.k, t=cfg.t, iters=cfg.second_iters,
-            metric=cfg.metric, policy=cfg.policy)
+            metric=cfg.metric, policy=cfg.policy, init_centers=init)
 
     # ------------------------------------------------------------ checkpoint
     def _state(self) -> dict:
@@ -567,6 +636,9 @@ class StreamService(ServingFrontEnd):
             "counters": {
                 "since_refresh": np.int64(self._since_refresh),
                 "next_id": np.int64(self._next_id),
+                "last_fit_epoch": np.int64(
+                    -1 if self._last_fit_epoch is None
+                    else self._last_fit_epoch),
                 "model_key": np.asarray(jax.random.key_data(self._model_key)),
             },
         }
@@ -577,6 +649,7 @@ class StreamService(ServingFrontEnd):
             "tree": StreamTree.skeleton_state(cfg.tree_config()),
             "model": self._model_skeleton(cfg),
             "counters": {"since_refresh": np.int64(0), "next_id": np.int64(0),
+                         "last_fit_epoch": np.int64(-1),
                          "model_key": np.zeros((2,), np.uint32)},
         }
 
@@ -601,6 +674,8 @@ class StreamService(ServingFrontEnd):
         svc.tree = StreamTree.from_state(cfg.tree_config(), state["tree"])
         svc._since_refresh = int(state["counters"]["since_refresh"])
         svc._next_id = int(state["counters"]["next_id"])
+        lfe = int(state["counters"]["last_fit_epoch"])
+        svc._last_fit_epoch = None if lfe < 0 else lfe
         svc._model_key = jax.random.wrap_key_data(
             jnp.asarray(state["counters"]["model_key"], jnp.uint32))
         svc._install_model_arrays(state["model"])

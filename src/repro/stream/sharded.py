@@ -91,7 +91,7 @@ class ShardedServiceConfig(BaseServiceConfig):
             dim=self.dim, k=self.k, t=self.site_t(),
             leaf_size=self.leaf_size, metric=self.metric,
             policy=self.policy, summarizer=self.summarizer, window=w,
-            seed=self.seed)
+            seed=self.seed, store=self.store)
 
 
 class RefreshStats(NamedTuple):
@@ -186,11 +186,31 @@ class ShardedStreamService(ServingFrontEnd):
         return self._fit_program
 
     def _fit_closure(self, version: int):
-        """Snapshot every site's packed root now; gather + fit later."""
+        """Snapshot every site's packed root now; gather + fit later.
+
+        With ``cfg.store`` set the fit key derives from the per-site root
+        epochs (monotone, so the tuple repeats iff no site's root moved):
+        an unchanged gathered root refits bit-identically, licensing the
+        incremental-refresh skip.  The opt-in warm start is host-sim only —
+        threading previous centers through the cached shard_map program
+        would retrace it for every refresh.
+        """
         cfg = self.cfg
         recs = [tr.num_records for tr in self.trees]
         if sum(recs) == 0:
             raise RuntimeError("refresh() before any point was ingested")
+        store, init = cfg.store, None
+        epochs = tuple(tr.root_epoch for tr in self.trees)
+        if store is not None:
+            # touch the incremental-refresh series so a store-configured
+            # run always exposes them (at zero until the first skip)
+            obs.counter("refresh.skipped", topology=self._topology).inc(0)
+            obs.counter("refresh.warm_starts",
+                        topology=self._topology).inc(0)
+            if (store.incremental_refresh and self.model is not None
+                    and epochs == self._last_fit_epoch):
+                return None
+            self._pending_fit_epoch = epochs
         # one static row count for every site: the all_gather payload shape
         rows = _bucket(max(max(recs), 1))
         # per-site gather spans: inside refresh.gather, so one refresh
@@ -215,7 +235,23 @@ class ShardedStreamService(ServingFrontEnd):
             payload_bytes=site_bytes)
         # every site ships the same padded root shape, hence equal bytes
         obs.record_comm(recs, [site_bytes] * cfg.n_sites, topology="sharded")
-        key = jax.random.fold_in(self._model_key, version)
+        if store is not None:
+            # epoch-keyed: the same roots refit to the same model.  The sum
+            # is strictly monotone in the per-site epochs, so it collides
+            # only when every site's root is unchanged.
+            key = jax.random.fold_in(self._model_key, sum(epochs))
+            if (store.warm_start_frac > 0.0 and self.model is not None
+                    and self._last_fit_epoch is not None and not use_sm):
+                parts = [tr.changed_weight_since(e) for tr, e
+                         in zip(self.trees, self._last_fit_epoch)]
+                changed = sum(c for c, _ in parts)
+                total = sum(t_ for _, t_ in parts)
+                if changed <= store.warm_start_frac * total:
+                    init = self.model.centers
+                    obs.counter("refresh.warm_starts",
+                                topology=self._topology).inc()
+        else:
+            key = jax.random.fold_in(self._model_key, version)
 
         if not use_sm:
             # host-sim: concatenation in site order is exactly what the
@@ -226,7 +262,7 @@ class ShardedStreamService(ServingFrontEnd):
                 jnp.asarray(wts.reshape(s * r)),
                 jnp.asarray(val.reshape(s * r)), key, version, k=cfg.k,
                 t=cfg.t, iters=cfg.second_iters, metric=cfg.metric,
-                policy=cfg.policy)
+                policy=cfg.policy, init_centers=init)
 
         program = self._gathered_program()
         triple = (jnp.asarray(pts), jnp.asarray(wts), jnp.asarray(val))
@@ -256,6 +292,10 @@ class ShardedStreamService(ServingFrontEnd):
                 "since_refresh": np.int64(self._since_refresh),
                 "next_id": np.int64(self._next_id),
                 "routed": np.int64(self._routed),
+                "last_fit_epochs": (
+                    np.full((self.cfg.n_sites,), -1, np.int64)
+                    if self._last_fit_epoch is None
+                    else np.asarray(self._last_fit_epoch, np.int64)),
                 "model_key": np.asarray(jax.random.key_data(self._model_key)),
             },
         }
@@ -269,6 +309,8 @@ class ShardedStreamService(ServingFrontEnd):
             "model": self._model_skeleton(cfg),
             "counters": {"since_refresh": np.int64(0), "next_id": np.int64(0),
                          "routed": np.int64(0),
+                         "last_fit_epochs": np.full((cfg.n_sites,), -1,
+                                                    np.int64),
                          "model_key": np.zeros((2,), np.uint32)},
         }
 
@@ -307,6 +349,9 @@ class ShardedStreamService(ServingFrontEnd):
         svc._since_refresh = int(state["counters"]["since_refresh"])
         svc._next_id = int(state["counters"]["next_id"])
         svc._routed = int(state["counters"]["routed"])
+        lfe = np.asarray(state["counters"]["last_fit_epochs"])
+        svc._last_fit_epoch = (tuple(int(e) for e in lfe)
+                               if (lfe >= 0).all() else None)
         svc._model_key = jax.random.wrap_key_data(
             jnp.asarray(state["counters"]["model_key"], jnp.uint32))
         svc._install_model_arrays(state["model"])

@@ -17,15 +17,26 @@ summary spans more than max(leaf_size, W // 4) raw points, and summaries
 whose newest point has fallen out of the window are evicted whole.  The
 model then tracks the last ~W points with eviction granularity <= W/4.
 
+Tiered storage (optional): with ``TreeConfig.store`` set to a tiered
+:class:`repro.store.StoreSpec`, summaries beyond the hot budget spill to
+disk through :class:`repro.store.TieredStore` and are demand-paged back
+exactly when a merge, ``root()`` or ``pack_state()`` touches them — the
+root stays bit-identical to the all-resident tree, only residency moves.
+The tree also tracks a monotone ``root_epoch`` (bumped on every mutation
+that changes ``root()``) plus per-node creation epochs, which is what
+lets the serving layer skip or warm-start provably-redundant refreshes.
+
 Checkpointing: the tree's state packs into a *fixed-shape* pytree of
 arrays (``pack_state``/``from_state``), so ``CheckpointManager`` can
 save/restore it across process restarts with its usual shape-checked
-manifest — no pickling.
+manifest — no pickling.  Spilled summaries are paged in for the pack (a
+checkpoint is self-contained) and the restored tree re-applies its hot
+budget.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +44,11 @@ import numpy as np
 
 from repro import obs
 from repro.kernels.dispatch import KernelPolicy, get_default_policy
+from repro.store.spec import StoreSpec
 from repro.stream.weighted import WeightedSummary, _bucket
+
+if TYPE_CHECKING:   # runtime import is lazy: repro.store.tiered imports
+    from repro.store.tiered import TieredStore   # this module's package
 from repro.summarize.base import (SummarizerPolicy, get_default_summarizer,
                                   record_bound, reduce_summaries, summarize)
 
@@ -57,6 +72,9 @@ class TreeConfig:
     max_summaries: int = 64          # checkpoint slots; force-merge beyond
     max_points: int = 2 ** 34        # stream-length bound for the record cap
     seed: int = 0
+    # None = everything resident (the classic in-memory tree); a tiered
+    # StoreSpec spills cold levels to disk behind the same root
+    store: Optional[StoreSpec] = None
 
     def __post_init__(self):
         if self.policy is None:
@@ -95,11 +113,18 @@ def record_cap(cfg: TreeConfig) -> int:
 
 @dataclasses.dataclass
 class TreeNode:
-    summary: WeightedSummary
+    summary: Optional[WeightedSummary]   # None while spilled to the store
     level: int
     min_seq: int    # [min_seq, max_seq): raw-point sequence ids spanned
     max_seq: int
     count: int      # raw points spanned
+    # metadata that must survive a spill (the store rebuilds the summary
+    # from these + the on-disk blob) and feed refresh reuse decisions
+    epoch: int = 0           # tree root_epoch when this node was created
+    n_records: int = 0       # summary rows (== summary.points.shape[0])
+    nbytes: int = 0          # resident payload bytes of the summary
+    weight: float = 0.0      # summary mass (WeightedSummary.total_weight)
+    spill_step: Optional[int] = None   # store step id while spilled
 
 
 class StreamTree:
@@ -115,6 +140,10 @@ class StreamTree:
         self._flushed = 0                    # raw points reduced into leaves
         self.total_ingested = 0
         self._cap = record_cap(cfg)
+        self._epoch = 0                      # bumped whenever root() changes
+        # the spill tier is created lazily, on the first budget enforcement:
+        # skeleton/throwaway trees never touch disk
+        self._store: Optional[TieredStore] = None
         # telemetry labels; owners may add context after construction (the
         # sharded service tags each site's tree with its site id)
         self.obs_labels: dict = {"summarizer": cfg.summarizer.name}
@@ -132,6 +161,8 @@ class StreamTree:
             raise ValueError(
                 f"{w.shape[0]} weights for {x.shape[0]} points — a silent "
                 f"truncation here would break mass conservation")
+        if x.shape[0]:
+            self._epoch += 1   # buffered rows are part of root()
         i = 0
         while i < x.shape[0]:
             take = min(self.cfg.leaf_size - self._buf_n, x.shape[0] - i)
@@ -157,13 +188,15 @@ class StreamTree:
                 kernel_policy=cfg.policy)
         obs.counter("tree.leaf_flushes", **self.obs_labels).inc()
         self._check_cap(summ)
-        self.nodes.append(TreeNode(
-            summary=summ, level=0, min_seq=self._flushed,
+        self._epoch += 1
+        self.nodes.append(self._make_node(
+            summ, level=0, min_seq=self._flushed,
             max_seq=self._flushed + self._buf_n, count=self._buf_n))
         self._flushed += self._buf_n
         self._buf_n = 0
         self._evict()
         self._compact()
+        self._enforce_store()
         self._update_gauges()
 
     def _update_gauges(self) -> None:
@@ -182,6 +215,68 @@ class StreamTree:
                 f"{self._cap}; raise TreeConfig.max_points or check weights "
                 f"(sub-unit weights break the 8t candidate-count bound)")
 
+    # ------------------------------------------------------------ store
+    def _make_node(self, summ: WeightedSummary, *, level: int, min_seq: int,
+                   max_seq: int, count: int) -> TreeNode:
+        from repro.store.tiered import summary_nbytes
+        return TreeNode(
+            summary=summ, level=level, min_seq=min_seq, max_seq=max_seq,
+            count=count, epoch=self._epoch,
+            n_records=int(summ.points.shape[0]),
+            nbytes=summary_nbytes(summ),
+            weight=float(summ.total_weight))
+
+    @property
+    def store(self) -> Optional[TieredStore]:
+        """The spill tier, created on first use (None until then, and
+        forever when the config has no tiered store)."""
+        cfg = self.cfg
+        if self._store is None and cfg.store is not None and cfg.store.tiered:
+            from repro.store.tiered import TieredStore
+            self._store = TieredStore(cfg.store, dim=cfg.dim,
+                                      labels=self.obs_labels)
+        return self._store
+
+    def _enforce_store(self) -> None:
+        if self.cfg.store is not None and self.cfg.store.tiered:
+            self.store.enforce(self.nodes)
+
+    def _node_summary(self, nd: TreeNode) -> WeightedSummary:
+        """The node's summary, demand-paged from the spill tier if cold
+        (transient — the node stays cold; see TieredStore.page_in)."""
+        if nd.summary is not None:
+            return nd.summary
+        return self._store.page_in(nd)
+
+    def _discard_node(self, nd: TreeNode) -> None:
+        if nd.spill_step is not None:
+            self._store.discard(nd)
+
+    @property
+    def root_epoch(self) -> int:
+        """Monotone counter, bumped on every mutation that changes
+        ``root()`` (ingest, flush, merge, evict).  Equal epochs imply an
+        identical root, which is what licenses skipping a refresh."""
+        return self._epoch
+
+    def level_epochs(self) -> dict[int, int]:
+        """Per-level dirty epoch: the newest node-creation epoch at each
+        live level (diagnostics for the incremental-refresh decisions)."""
+        out: dict[int, int] = {}
+        for nd in self.nodes:
+            out[nd.level] = max(out.get(nd.level, 0), nd.epoch)
+        return out
+
+    def changed_weight_since(self, epoch: int) -> tuple[float, float]:
+        """(mass created after ``epoch``, total live mass) — from node
+        metadata + the buffer, no page-ins.  The serving layer compares
+        the ratio against ``StoreSpec.warm_start_frac``."""
+        buf = float(self._buf_w[:self._buf_n].sum()) if self._buf_n else 0.0
+        changed = buf + sum(nd.weight for nd in self.nodes
+                            if nd.epoch > epoch)
+        total = buf + sum(nd.weight for nd in self.nodes)
+        return changed, total
+
     # ------------------------------------------------------------ merge
     def _evict(self) -> None:
         if self.cfg.window is None:
@@ -191,24 +286,34 @@ class StreamTree:
         if len(keep) < len(self.nodes):
             obs.counter("tree.evictions",
                         **self.obs_labels).inc(len(self.nodes) - len(keep))
+            self._epoch += 1
+            for nd in self.nodes:
+                if nd.max_seq <= cutoff:
+                    self._discard_node(nd)   # spilled blob leaves with it
         self.nodes = keep
 
     def _merge_pair(self, i: int, j: int) -> None:
         a, b = self.nodes[i], self.nodes[j]
         cfg = self.cfg
         with obs.trace("ingest.merge_reduce", **self.obs_labels):
+            # demand-page spilled operands exactly here, where the merge
+            # actually consumes them
             summ = reduce_summaries(
-                [a.summary, b.summary], self._next_key(), k=cfg.k, t=cfg.t,
+                [self._node_summary(a), self._node_summary(b)],
+                self._next_key(), k=cfg.k, t=cfg.t,
                 alpha=cfg.alpha, beta=cfg.beta, metric=cfg.metric,
                 policy=cfg.summarizer, kernel_policy=cfg.policy)
         obs.counter("tree.merges", **self.obs_labels).inc()
         self._check_cap(summ)
-        self.nodes[i] = TreeNode(
-            summary=summ, level=max(a.level, b.level) + 1,
+        self._epoch += 1
+        self.nodes[i] = self._make_node(
+            summ, level=max(a.level, b.level) + 1,
             min_seq=min(a.min_seq, b.min_seq),
             max_seq=max(a.max_seq, b.max_seq),
             count=a.count + b.count)
         del self.nodes[j]
+        self._discard_node(a)
+        self._discard_node(b)
 
     def _max_span(self) -> Optional[int]:
         if self.cfg.window is None:
@@ -243,10 +348,13 @@ class StreamTree:
     # ------------------------------------------------------------ read
     def root(self, include_buffer: bool = True):
         """Union of all live summaries (+ the unreduced buffer as unit-ish
-        weighted raw records): (points (s,d), weights (s,), is_candidate)."""
-        pts = [nd.summary.points for nd in self.nodes]
-        wts = [nd.summary.weights for nd in self.nodes]
-        cand = [nd.summary.is_candidate for nd in self.nodes]
+        weighted raw records): (points (s,d), weights (s,), is_candidate).
+        Spilled summaries are paged in transiently — the concatenation is
+        bit-identical to the all-resident tree's."""
+        summs = [self._node_summary(nd) for nd in self.nodes]
+        pts = [s.points for s in summs]
+        wts = [s.weights for s in summs]
+        cand = [s.is_candidate for s in summs]
         if include_buffer and self._buf_n:
             pts.append(self._buf[:self._buf_n].copy())
             wts.append(self._buf_w[:self._buf_n].copy())
@@ -290,8 +398,8 @@ class StreamTree:
 
     @property
     def num_records(self) -> int:
-        return (sum(nd.summary.points.shape[0] for nd in self.nodes)
-                + self._buf_n)
+        # node metadata, not the summaries: must not fault spilled nodes in
+        return sum(nd.n_records for nd in self.nodes) + self._buf_n
 
     # ------------------------------------------------------------ state
     def pack_state(self) -> dict:
@@ -307,18 +415,22 @@ class StreamTree:
         min_seq = np.zeros((S,), np.int64)
         max_seq = np.zeros((S,), np.int64)
         count = np.zeros((S,), np.int64)
+        node_epoch = np.zeros((S,), np.int64)
         for i, nd in enumerate(self.nodes):
-            s = nd.summary.points.shape[0]
-            pts[i, :s] = nd.summary.points
-            wts[i, :s] = nd.summary.weights
-            cand[i, :s] = nd.summary.is_candidate
+            summ = self._node_summary(nd)   # checkpoints are self-contained
+            s = summ.points.shape[0]
+            pts[i, :s] = summ.points
+            wts[i, :s] = summ.weights
+            cand[i, :s] = summ.is_candidate
             valid[i, :s] = True
             level[i] = nd.level
             min_seq[i], max_seq[i], count[i] = nd.min_seq, nd.max_seq, nd.count
+            node_epoch[i] = nd.epoch
         return {
             "points": pts, "weights": wts, "is_candidate": cand,
             "valid": valid, "level": level, "min_seq": min_seq,
-            "max_seq": max_seq, "count": count,
+            "max_seq": max_seq, "count": count, "node_epoch": node_epoch,
+            "root_epoch": np.int64(self._epoch),
             "buffer": self._buf.copy(), "buffer_w": self._buf_w.copy(),
             "buffer_n": np.int64(self._buf_n),
             "flushed": np.int64(self._flushed),
@@ -343,6 +455,7 @@ class StreamTree:
         tree._buf_n = int(g["buffer_n"])
         tree._flushed = int(g["flushed"])
         tree.total_ingested = int(g["total_ingested"])
+        tree._epoch = int(g["root_epoch"])
         for i in range(cfg.max_summaries):
             if int(g["level"][i]) < 0:
                 continue
@@ -353,8 +466,11 @@ class StreamTree:
                 is_candidate=g["is_candidate"][i][v].astype(bool),
                 n_rounds=0,
                 total_weight=float(g["weights"][i][v].sum()))
-            tree.nodes.append(TreeNode(
-                summary=summ, level=int(g["level"][i]),
+            nd = tree._make_node(
+                summ, level=int(g["level"][i]),
                 min_seq=int(g["min_seq"][i]), max_seq=int(g["max_seq"][i]),
-                count=int(g["count"][i])))
+                count=int(g["count"][i]))
+            nd.epoch = int(g["node_epoch"][i])
+            tree.nodes.append(nd)
+        tree._enforce_store()   # restored nodes re-obey the hot budget
         return tree

@@ -67,6 +67,34 @@ def test_checkpoint_interrupted_write_invisible(tmp_path):
     assert cm.latest_step() == 1
 
 
+def test_checkpoint_async_write_error_reraised(tmp_path, monkeypatch):
+    """A failed async write must not die silently with the daemon thread:
+    wait() re-raises it on the caller, and so does the next save() (which
+    waits first), so dependent work cannot proceed past a lost step."""
+    cm = CheckpointManager(tmp_path)
+    orig = np.save
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "save", boom)
+    cm.save(1, _tree(0))             # async: enqueues, returns immediately
+    with pytest.raises(OSError, match="disk full"):
+        cm.wait()
+    # the failed step was never published
+    assert cm.all_steps() == []
+    # error also surfaces on the next save(), not just an explicit wait():
+    # save(3) joins the failed step-2 writer before touching disk itself
+    cm.save(2, _tree(0))
+    with pytest.raises(OSError, match="disk full"):
+        cm.save(3, _tree(0), blocking=True)
+    assert cm.all_steps() == []
+    # ...and once drained the manager keeps working
+    monkeypatch.setattr(np, "save", orig)
+    cm.save(4, _tree(0), blocking=True)
+    assert cm.latest_step() == 4
+
+
 # ------------------------------------------------------------ data pipeline
 def test_pipeline_deterministic_and_shard_disjoint():
     cfg = PipelineConfig(vocab=64, seq_len=32, global_batch=8, n_shards=4, seed=7)

@@ -1,0 +1,365 @@
+"""Tiered summary store: spec validation, spill/page-in bit-identity on
+drifting windowed streams, eviction-vs-spill interplay, checkpoint
+round-trips with spilled levels, incremental refresh (skip + warm start),
+counter accounting, and the config-version migration hook.
+
+Most tests isolate metrics with ``obs.using_registry`` so counters from
+one test never leak into another's accounting assertions.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api.config import (PipelineConfig, _MIGRATIONS, pipeline_config,
+                              register_config_migration)
+from repro.api.session import Session
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import drifting_gauss
+from repro.store import StoreSpec
+from repro.stream import ServiceConfig, StreamService, StreamTree, TreeConfig
+
+
+def _drift(n, d=4, seed=0):
+    """First `n` points of a 3-phase drifting mixture (seeded, float32)."""
+    per = -(-n // (3 * 6))  # ceil so we always have >= n points
+    x, _, _ = drifting_gauss(n_phases=3, n_centers=6, per_center=per,
+                             d=d, sigma=0.05, drift=4.0, seed=seed)
+    return np.asarray(x[:n], np.float32)
+
+
+def _cold(tree):
+    return [nd for nd in tree.nodes if nd.summary is None]
+
+
+# ------------------------------------------------------------ spec
+def test_storespec_validation():
+    assert not StoreSpec().tiered
+    assert StoreSpec(hot_levels=0).tiered
+    assert StoreSpec(hot_bytes=1 << 20).tiered
+    with pytest.raises(ValueError, match="hot_levels"):
+        StoreSpec(hot_levels=-1)
+    with pytest.raises(ValueError, match="hot_levels"):
+        StoreSpec(hot_levels=True)
+    with pytest.raises(ValueError, match="hot_bytes"):
+        StoreSpec(hot_bytes=0)
+    with pytest.raises(ValueError, match="warm_start_frac"):
+        StoreSpec(warm_start_frac=1.5)
+    with pytest.raises(ValueError, match="incremental_refresh"):
+        StoreSpec(incremental_refresh="yes")
+    with pytest.raises(ValueError, match="directory"):
+        StoreSpec(directory=7)
+
+
+# ------------------------------------------------------------ tiering
+def _tree_pair(spec, *, n=40_000, window=8192, leaf_size=512, seed=0):
+    """Ingest the same drifting stream into an untiered and a tiered tree."""
+    base = dict(dim=4, k=6, t=24, leaf_size=leaf_size, window=window,
+                seed=3)
+    plain = StreamTree(TreeConfig(**base))
+    tiered = StreamTree(TreeConfig(**base, store=spec))
+    x = _drift(n, seed=seed)
+    for i in range(0, len(x), 4096):
+        plain.ingest(x[i:i + 4096])
+        tiered.ingest(x[i:i + 4096])
+    return plain, tiered
+
+
+def test_tiered_root_bit_identical_under_level_budget():
+    with obs.using_registry(obs.MetricsRegistry()):
+        plain, tiered = _tree_pair(StoreSpec(hot_levels=0))
+        # the tier must actually engage: deep levels spilled, merges of
+        # cold nodes demand-paged them back
+        st = tiered.store.stats()
+        assert st["spills"] >= 1 and st["page_ins"] >= 1
+        assert st["spill_bytes"] > 0 and st["page_in_bytes"] > 0
+        assert len(_cold(tiered)) >= 1
+        # ...and move bytes only: the root is bit-identical
+        for a, b in zip(plain.packed_root(), tiered.packed_root()):
+            np.testing.assert_array_equal(a, b)
+        assert plain.total_weight == tiered.total_weight
+        assert plain.num_records == tiered.num_records
+
+
+def test_tiered_byte_budget_bounds_resident_payload():
+    budget = 8 * 1024
+    with obs.using_registry(obs.MetricsRegistry()):
+        plain, tiered = _tree_pair(StoreSpec(hot_bytes=budget))
+        resident = sum(nd.nbytes for nd in tiered.nodes
+                       if nd.summary is not None)
+        assert resident <= budget
+        assert tiered.store.stats()["spills"] >= 1
+        for a, b in zip(plain.packed_root(), tiered.packed_root()):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_spilled_nodes_metadata_survives():
+    with obs.using_registry(obs.MetricsRegistry()):
+        _, tiered = _tree_pair(StoreSpec(hot_levels=0))
+        for nd in _cold(tiered):
+            # everything refresh decisions / gauges need stays on the node
+            assert nd.spill_step is not None
+            assert nd.n_records > 0 and nd.nbytes > 0 and nd.weight > 0
+        # page_in is transient: reading a cold node does not re-residentize
+        nd = _cold(tiered)[0]
+        summ = tiered.store.page_in(nd)
+        assert summ.points.shape[0] == nd.n_records
+        assert nd.summary is None
+
+
+def test_eviction_discards_spilled_files():
+    """Window eviction of a cold node must delete its on-disk blob — the
+    spill directory tracks live cold nodes, not stream history."""
+    with obs.using_registry(obs.MetricsRegistry()):
+        cfg = TreeConfig(dim=4, k=6, t=24, leaf_size=256, window=2048,
+                         seed=3, store=StoreSpec(hot_levels=0))
+        tree = StreamTree(cfg)
+        x = _drift(30_000, seed=1)
+        for i in range(0, len(x), 1024):
+            tree.ingest(x[i:i + 1024])
+        store = tree.store
+        store.flush()
+        on_disk = store.manager.all_steps()
+        cold_steps = sorted(nd.spill_step for nd in _cold(tree))
+        assert on_disk == cold_steps
+        # far fewer blobs than total spills: evicted cold nodes were
+        # discarded from disk, not leaked
+        assert len(on_disk) < store.stats()["spills"]
+
+
+def test_store_counter_accounting():
+    with obs.using_registry(obs.MetricsRegistry()) as reg:
+        _, tiered = _tree_pair(StoreSpec(hot_levels=0), n=20_000)
+        store = tiered.store
+        st = store.stats()
+        # local tallies mirror the obs counters exactly
+        snap = reg.snapshot()["counters"]
+        labels = ",".join(f"{k}={v}" for k, v in sorted(store.labels.items()))
+        for key in ("spills", "page_ins", "spill_bytes", "page_in_bytes"):
+            assert snap[f"store.{key}{{{labels}}}"] == st[key]
+        # every currently-cold node was spilled exactly once and never
+        # re-spilled after a transient page-in
+        assert st["spills"] >= len(_cold(tiered))
+        store.sync(tiered.nodes)
+        g = reg.snapshot()["gauges"]
+        assert g[f"store.hot_nodes{{{labels}}}"] + \
+            g[f"store.cold_nodes{{{labels}}}"] == len(tiered.nodes)
+        assert g[f"store.cold_bytes{{{labels}}}"] == \
+            sum(nd.nbytes for nd in _cold(tiered))
+
+
+# ------------------------------------------------------------ service
+def _svc_cfg(**over):
+    base = dict(dim=4, k=5, t=20, leaf_size=512, refresh_every=4096,
+                window=8192, seed=7)
+    base.update(over)
+    return ServiceConfig(**base)
+
+
+def test_service_scores_bit_identical_tiered_vs_untiered():
+    """Tiering moves bytes only: an untiered service with the same spec
+    (hence the same epoch-derived fit keys) scores bit-identically."""
+    x = _drift(24_000, seed=2)
+    q = _drift(256, seed=9)
+    plain = StreamService(_svc_cfg(store=StoreSpec()))
+    tiered = StreamService(_svc_cfg(store=StoreSpec(hot_levels=0)))
+    for i in range(0, len(x), 2048):
+        plain.ingest(x[i:i + 2048])
+        tiered.ingest(x[i:i + 2048])
+    for a, b in zip(plain.tree.packed_root(), tiered.tree.packed_root()):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(plain.score(q), tiered.score(q)):
+        assert a.center == b.center
+        assert a.distance == b.distance          # bit-identical
+        assert a.outlier_score == b.outlier_score
+
+
+def test_service_checkpoint_roundtrip_with_spilled_levels(tmp_path):
+    cfg = _svc_cfg(store=StoreSpec(hot_levels=0))
+    svc = StreamService(cfg)
+    x = _drift(24_000, seed=4)
+    for i in range(0, len(x), 2048):
+        svc.ingest(x[i:i + 2048])
+    assert len(_cold(svc.tree)) >= 1   # checkpoint must pack cold levels
+    q = _drift(256, seed=11)
+    before = svc.score(q)
+    svc.save(CheckpointManager(tmp_path), step=1)
+    restored = StreamService.restore(cfg, CheckpointManager(tmp_path))
+    # the restored tree re-tiers under its own fresh spill directory
+    assert len(_cold(restored.tree)) >= 1
+    for a, b in zip(svc.tree.packed_root(), restored.tree.packed_root()):
+        np.testing.assert_array_equal(a, b)
+    after = restored.score(q)
+    for a, b in zip(before, after):
+        assert a.center == b.center
+        assert a.distance == b.distance
+        assert a.outlier_score == b.outlier_score
+    restored.ingest(x[:2048])
+    assert restored.tree.total_ingested == svc.tree.total_ingested + 2048
+
+
+# ------------------------------------------------------------ refresh reuse
+def test_incremental_refresh_skips_unchanged_root():
+    with obs.using_registry(obs.MetricsRegistry()) as reg:
+        svc = StreamService(_svc_cfg(store=StoreSpec(hot_levels=0)))
+        x = _drift(12_000, seed=5)
+        svc.ingest(x)
+        svc.refresh(blocking=True)   # fold in the post-cadence leftovers
+        v = int(svc.model.version)
+        assert v >= 1
+        # no new points -> root unchanged -> both refreshes are skipped
+        svc.refresh(blocking=True)
+        svc.refresh(blocking=True)
+        assert int(svc.model.version) == v
+        snap = reg.snapshot()["counters"]
+        assert snap["refresh.skipped{topology=stream}"] >= 2
+
+
+def test_incremental_refresh_scores_bit_identical_to_always_refit():
+    x = _drift(20_000, seed=6)
+    q = _drift(256, seed=13)
+    skip = StreamService(_svc_cfg(
+        store=StoreSpec(hot_levels=0, incremental_refresh=True)))
+    refit = StreamService(_svc_cfg(
+        store=StoreSpec(hot_levels=0, incremental_refresh=False)))
+    for i in range(0, len(x), 2048):
+        skip.ingest(x[i:i + 2048])
+        refit.ingest(x[i:i + 2048])
+    # force extra refreshes with nothing new: `skip` skips, `refit` refits
+    for _ in range(2):
+        skip.refresh(blocking=True)
+        refit.refresh(blocking=True)
+    assert int(refit.model.version) > int(skip.model.version)
+    # the skipped fits were provably redundant: scores are bit-identical
+    for a, b in zip(skip.score(q), refit.score(q)):
+        assert a.center == b.center
+        assert a.distance == b.distance
+        assert a.outlier_score == b.outlier_score
+
+
+def test_warm_start_counter_and_validity():
+    with obs.using_registry(obs.MetricsRegistry()) as reg:
+        svc = StreamService(_svc_cfg(
+            refresh_every=100_000,
+            store=StoreSpec(warm_start_frac=1.0)))
+        x = _drift(16_000, seed=8)
+        svc.ingest(x[:12_000])
+        svc.refresh(blocking=True)
+        v = int(svc.model.version)
+        svc.ingest(x[12_000:])   # small new mass -> warm-startable
+        svc.refresh(blocking=True)
+        assert int(svc.model.version) == v + 1
+        snap = reg.snapshot()["counters"]
+        assert snap["refresh.warm_starts{topology=stream}"] >= 1
+        assert np.isfinite(np.asarray(svc.model.centers)).all()
+
+
+# ------------------------------------------------------------ api surface
+def test_session_store_stats_and_obs_series():
+    with obs.using_registry(obs.MetricsRegistry()) as reg:
+        cfg = pipeline_config(dim=4, k=5, t=20, topology="stream",
+                              window=8192, leaf_size=512,
+                              refresh_every=4096, seed=7,
+                              store={"hot_levels": 0})
+        sess = Session(cfg)
+        sess.ingest(_drift(16_000, seed=2))
+        st = sess.store_stats()
+        assert st is not None and st["spills"] >= 1
+        snap = reg.snapshot()
+        series = set(snap["counters"]) | set(snap["gauges"])
+        for prefix in ("store.spills{", "store.page_ins{",
+                       "store.hot_bytes{", "store.cold_nodes{",
+                       "refresh.skipped{", "refresh.warm_starts{"):
+            assert any(s.startswith(prefix) for s in series), prefix
+    # untiered sessions report no store
+    plain = Session(pipeline_config(dim=4, k=5, t=20, topology="stream",
+                                    leaf_size=512, seed=7))
+    plain.ingest(_drift(4_000, seed=2))
+    assert plain.store_stats() is None
+
+
+# ------------------------------------------------------------ config version
+def test_config_v1_migrates_with_warning():
+    d = pipeline_config(dim=4, k=5, t=20).to_dict()
+    d["version"] = 1
+    with pytest.warns(UserWarning, match="version-1"):
+        cfg = PipelineConfig.from_dict(d)
+    assert cfg.problem.dim == 4 and cfg.to_dict()["version"] == 2
+
+
+def test_config_unknown_version_rejected():
+    d = pipeline_config(dim=4, k=5, t=20).to_dict()
+    d["version"] = 99
+    with pytest.raises(ValueError, match="not supported"):
+        PipelineConfig.from_dict(d)
+
+
+def test_config_migration_registry_chains():
+    @register_config_migration(0)
+    def _v0_to_v1(d):
+        d.pop("legacy_knob", None)
+        return d
+    try:
+        d = pipeline_config(dim=4, k=5, t=20).to_dict()
+        d.update(version=0, legacy_knob=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")   # v1->v2 hop still warns
+            cfg = PipelineConfig.from_dict(d)
+        assert cfg.problem.k == 5
+    finally:
+        del _MIGRATIONS[0]
+
+
+def test_config_store_roundtrip_and_validation():
+    cfg = pipeline_config(dim=4, k=5, t=20, topology="stream", window=8192,
+                          store={"hot_levels": 1, "warm_start_frac": 0.5})
+    again = PipelineConfig.from_dict(cfg.to_dict())
+    assert again.store == cfg.store == StoreSpec(hot_levels=1,
+                                                 warm_start_frac=0.5)
+    # bare forms: bool toggles refresh-reuse only, int means hot_levels
+    assert pipeline_config(dim=4, k=5, t=20, topology="stream",
+                           store=True).store == StoreSpec()
+    assert pipeline_config(dim=4, k=5, t=20, topology="stream",
+                           store=2).store == StoreSpec(hot_levels=2)
+    assert pipeline_config(dim=4, k=5, t=20, topology="stream",
+                           store=False).store is None
+    with pytest.raises(ValueError, match="stream/sharded"):
+        pipeline_config(dim=4, k=5, t=20, store={"hot_levels": 0})
+
+
+# ------------------------------------------------------------ property (slow)
+@pytest.mark.slow
+def test_property_long_drifting_stream_under_tiny_budget(tmp_path):
+    """ISSUE acceptance: a windowed 1M-point drifting stream under a tiny
+    hot budget stays bit-identical to the in-memory tree, interleaves
+    eviction with spilling without leaking blobs, survives a checkpoint
+    round-trip with spilled levels, and keeps counters consistent."""
+    with obs.using_registry(obs.MetricsRegistry()):
+        n, batch = 1_000_000, 8192
+        base = dict(dim=5, k=8, t=40, leaf_size=2048, window=65_536, seed=3)
+        plain = StreamTree(TreeConfig(**base))
+        tiered = StreamTree(TreeConfig(**base,
+                                       store=StoreSpec(hot_levels=1)))
+        x = _drift(n, d=5, seed=0)
+        for i in range(0, n, batch):
+            plain.ingest(x[i:i + batch])
+            tiered.ingest(x[i:i + batch])
+        st = tiered.store.stats()
+        assert st["spills"] > 10 and st["page_ins"] > 10
+        for a, b in zip(plain.packed_root(), tiered.packed_root()):
+            np.testing.assert_array_equal(a, b)
+        # eviction-vs-spill interplay: the windowed stream evicted most of
+        # its history, so live blobs are a small fraction of total spills
+        tiered.store.flush()
+        on_disk = tiered.store.manager.all_steps()
+        assert sorted(nd.spill_step for nd in _cold(tiered)) == on_disk
+        assert len(on_disk) < st["spills"] // 2
+        # checkpoint round-trip with spilled levels
+        cfg = TreeConfig(**base, store=StoreSpec(hot_levels=1))
+        cm = CheckpointManager(tmp_path)
+        cm.save(1, tiered.pack_state(), blocking=True)
+        state, _ = cm.restore(tiered.pack_state())
+        restored = StreamTree.from_state(cfg, state)
+        for a, b in zip(tiered.packed_root(), restored.packed_root()):
+            np.testing.assert_array_equal(a, b)
